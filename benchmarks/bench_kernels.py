@@ -1,0 +1,70 @@
+"""Fused-kernel micro-benchmarks (the paper's "fused kernels" feature row).
+
+Times the jnp reference path on CPU (wall) and reports the Pallas kernel's
+VMEM working set + MXU alignment — the TPU-relevant derived quantities.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6     # us
+
+
+def run():
+    print("# kernel micro-benchmarks (CPU ref path wall; TPU kernel is the "
+          "target)")
+    print("name,us_per_call,derived")
+    key = jax.random.PRNGKey(0)
+    rows, d = 4096, 1024
+
+    x = jax.random.normal(key, (rows, d), jnp.float32)
+    w = jnp.ones((d,))
+    us = _time(jax.jit(lambda a, b: ref.rmsnorm(a, b)), x, w)
+    print(f"rmsnorm_{rows}x{d},{us:.1f},vmem_tile_KB="
+          f"{256 * d * 4 / 1024:.0f}")
+
+    g = jax.random.normal(key, (rows, d))
+    u = jax.random.normal(jax.random.fold_in(key, 1), (rows, d))
+    us = _time(jax.jit(ref.swiglu), g, u)
+    print(f"swiglu_{rows}x{d},{us:.1f},fused_hbm_saving_MB="
+          f"{rows * d * 4 / 1e6:.1f}")
+
+    b, s, h, hd = 4, 1024, 8, 128
+    q = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 2), (b, s, 2, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (b, s, 2, hd))
+    us = _time(jax.jit(lambda q, k, v: ops.attention(q, k, v)), q, k, v)
+    flops = 4 * b * h * s * s * hd / 2  # causal
+    print(f"flash_attention_b{b}_s{s},{us:.1f},GFLOP={flops/1e9:.2f}")
+
+    t, dd, f, e = 1024, 512, 1024, 8
+    gs = jnp.full((e,), t // e, jnp.int32)
+    xg = jax.random.normal(key, (t, dd))
+    wg = jax.random.normal(jax.random.fold_in(key, 4), (e, dd, f))
+    us = _time(jax.jit(lambda x, w, g: ops.gmm(x, w, g)), xg, wg, gs)
+    print(f"gmm_t{t}_e{e},{us:.1f},active_GFLOP={2*t*dd*f/1e9:.2f}")
+
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    cos, sin = ops.rope_tables(pos, hd, 1e4)
+    us = _time(jax.jit(lambda x, c, s_: ops.apply_rope(x, c[:, :, None, :],
+                                                       s_[:, :, None, :])),
+               q, cos, sin)
+    print(f"rope_b{b}_s{s},{us:.1f},rotated_MB={q.size*4/1e6:.1f}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Paper Figure 9 — cluster linearity of the sample flow.
+
+64 prompts per node, scaling 1→24 nodes; dispatch wall-time modeled through
+the real dock ledger (max per-warehouse link load).  Linearity = throughput
+at N nodes / (N × throughput at 1 node), where sample-flow time is the
+dock's simulated dispatch plus a fixed per-node compute time (the compute
+scales perfectly; dispatch is what breaks linearity — the paper's point).
+
+Variants: MSRL (one warehouse per node), MSRLB (central replay buffer but
+distributed controllers), VeRL-like (central buffer + central controller).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.transfer_dock import (CentralReplayBuffer, DispatchLedger,
+                                      TransferDock)
+
+PROMPTS_PER_NODE = 64
+N_GEN = 8
+ROW_BYTES = 4 * (2048 + 5 * 8192)      # Eq. (1) per-sample payload, B=4
+COMPUTE_S = 30.0                        # per-iteration compute (perfectly DP)
+
+
+def _states(nodes: int) -> dict:
+    return {"actor_generation": 0, "actor_inference": 0,
+            "ref_inference": 1 % nodes, "reward": 2 % nodes,
+            "actor_update": 0}
+
+
+def _simulate(dock, nodes: int) -> float:
+    """Workers are data-parallel across ALL nodes (each node's actor shard
+    produces and consumes its 1/nodes slice) — the Fig 2 pipeline."""
+    n = PROMPTS_PER_NODE * nodes * N_GEN
+    rows = np.zeros((n, ROW_BYTES // 4), np.float32)
+    per = n // nodes
+    slices = [(list(range(i * per, (i + 1) * per)), i) for i in range(nodes)]
+    for idxs, node in slices:                       # generation writes
+        dock.put("tokens", idxs, rows[:per], src_node=node)
+    for state in ("actor_inference", "ref_inference", "reward"):
+        for idxs, node in slices:                   # three readers
+            dock.get(state, "tokens", idxs, dst_node=node)
+    for idxs, node in slices:                       # inference writes
+        dock.put("old_logp", idxs, rows[:per], src_node=node)
+    for idxs, node in slices:                       # update reads
+        dock.get("actor_update", "tokens", idxs, dst_node=node)
+        dock.get("actor_update", "old_logp", idxs, dst_node=node)
+    return dock.ledger.simulated_dispatch_time
+
+
+def run(max_nodes: int = 24):
+    print("# Figure 9 — linearity (throughput_N / (N * throughput_1))")
+    print("nodes,MSRL,MSRLB,VeRL-like")
+    base = {}
+    out = []
+    for nodes in (1, 2, 4, 8, 16, 24):
+        if nodes > max_nodes:
+            break
+        res = {}
+        for name in ("MSRL", "MSRLB", "VeRL-like"):
+            if name == "MSRL":
+                dock = TransferDock(nodes, _states(nodes), DispatchLedger())
+            elif name == "MSRLB":
+                dock = TransferDock(1, _states(nodes), DispatchLedger())
+            else:
+                dock = CentralReplayBuffer(_states(nodes), DispatchLedger())
+            dt = _simulate(dock, nodes)
+            # throughput ∝ tokens / (compute + dispatch); tokens ∝ nodes
+            tput = nodes * PROMPTS_PER_NODE * N_GEN / (COMPUTE_S + dt)
+            res[name] = tput
+        if not base:
+            base = dict(res)
+        lin = {k: res[k] / (nodes * base[k]) for k in res}
+        print(f"{nodes},{lin['MSRL']:.3f},{lin['MSRLB']:.3f},"
+              f"{lin['VeRL-like']:.3f}")
+        out.append((nodes, lin))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Paper §"Results of Large-scale MoE Models" (Fig. 11) — the 400B-class MoE
+at production scale, from the compiled dry-run records.
+
+The paper trains DeepSeek-R1-671B on 384 NPUs with stage-specific layouts
+(TP4PP6EP16DP2 update / TP2PP1EP64DP6 generation).  Our analogue is
+llama4-maverick-400b-a17b on the 256/512-chip meshes with EP16+FSDP update
+layout and the EP generation layout, plus the resharding-flow collective
+schedule between them.  This section reads the dry-run JSONs and reports the
+per-stage roofline + the modeled end-to-end tokens/s/device (Eq. 5 with the
+roofline max-terms standing in for stage times).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+ARCH = "llama4-maverick-400b-a17b"
+
+
+def _rec(shape: str, mesh: str, tag: str = "opt"):
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(RESULTS, f"{ARCH}__{shape}__{mesh}{suffix}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def run():
+    print(f"# Large-scale MoE ({ARCH}) — per-device roofline terms (s)")
+    print("mesh,shape,compute,memory,collective,dominant,args_GB")
+    for mesh in ("16x16", "2x16x16"):
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            r = _rec(shape, mesh)
+            if not r:
+                continue
+            args_gb = r["memory_stats"]["argument_bytes"] / 2 ** 30
+            print(f"{mesh},{shape},{r['compute_s']:.2f},{r['memory_s']:.2f},"
+                  f"{r['collective_s']:.2f},{r['dominant']},{args_gb:.1f}")
+
+    # Roofline UPPER BOUND on Eq.-5 throughput for the paper's Fig.-11
+    # setting (G=384, N=32, PL=1K, SL=2K) on 512 chips — analytic terms
+    # (active-path compute + KV-cache traffic), i.e. zero bubbles, no
+    # long-tail, perfect overlap.
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.configs import get_config
+    from repro.launch.analysis import TPU_V5E, active_params
+
+    cfg = get_config(ARCH)
+    G, N, PL, SL, ND = 384, 32, 1024, 2048, 512
+    act = active_params(cfg)
+    toks = G * N * (PL + SL)
+    t_update = 6 * act * toks / (ND * TPU_V5E.peak_flops)
+    t_prefill = 2 * act * (G * N * PL) / (ND * TPU_V5E.peak_flops)
+    cache_per_seq = (cfg.num_layers * (PL + SL / 2) * cfg.num_kv_heads
+                     * cfg.head_dim * 2 * 2)          # k+v bf16, avg ctx
+    step = (2 * act / ND + cache_per_seq * G * N / ND) / TPU_V5E.hbm_bw
+    t_decode = SL * step
+    ete = t_update + t_prefill + t_decode
+    tput = toks / ND / ete
+    print(f"\nEq.-5 roofline bound (512 chips, G=384 N=32 PL=1K SL=2K): "
+          f"prefill {t_prefill:.1f}s + decode {t_decode:.1f}s + update "
+          f"{t_update:.1f}s -> T <= {tput:.0f} tok/s/device.")
+    print("paper measures 200-250 TPS for DeepSeek-R1-671B on 384 NPUs — "
+          f"~{250 / tput * 100:.0f}% of this bound, a typical synchronous-RL "
+          "efficiency once long-tail generation and stage bubbles are paid.")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Regenerate the data-driven tables inside EXPERIMENTS.md from
+benchmarks/results/*.json (keeps the narrative sections intact by rewriting
+only the blocks between the AUTOGEN markers — or, with --full, rewrites the
+whole §Roofline chapter)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.roofline_table import fmt_table, load  # noqa: E402
+
+
+def maxterm(r):
+    return max(r["compute_s"], r["memory_s"], r["collective_s"])
+
+
+def tables() -> dict:
+    base = load("16x16", None)
+    opt = load("16x16", "opt")
+    multi_opt = load("2x16x16", "opt")
+    base_d = {(r["arch"], r["shape"]): r for r in base
+              if r.get("status") == "ok"}
+    opt_d = {(r["arch"], r["shape"]): r for r in opt
+             if r.get("status") == "ok"}
+    mo_d = {(r["arch"], r["shape"]): r for r in multi_opt
+            if r.get("status") == "ok"}
+
+    delta = ["| arch | shape | base dominant | base max s | opt dominant | "
+             "opt max s | speedup |", "|---|---|---|---|---|---|---|"]
+    for k in sorted(base_d):
+        if k not in opt_d:
+            continue
+        b, o = base_d[k], opt_d[k]
+        bm, om = maxterm(b), maxterm(o)
+        delta.append(f"| {k[0]} | {k[1]} | {b['dominant']} | {bm:.2f} | "
+                     f"{o['dominant']} | {om:.2f} | "
+                     f"{bm / max(om, 1e-9):.2f}x |")
+
+    pods = ["| arch | shape | 256-chip s | 512-chip s | scaling |",
+            "|---|---|---|---|---|"]
+    for k in sorted(opt_d):
+        if k not in mo_d:
+            continue
+        o, m = opt_d[k], mo_d[k]
+        pods.append(f"| {k[0]} | {k[1]} | {maxterm(o):.2f} | "
+                    f"{maxterm(m):.2f} | "
+                    f"{maxterm(o) / max(maxterm(m), 1e-9):.2f}x |")
+
+    return {
+        "base_table": fmt_table(base),
+        "opt_table": fmt_table(opt),
+        "delta_table": "\n".join(delta),
+        "pod_table": "\n".join(pods),
+    }
+
+
+def run():
+    t = tables()
+    for name, content in t.items():
+        path = os.path.join(os.path.dirname(__file__), "results",
+                            f"_{name}.md")
+        with open(path, "w") as f:
+            f.write(content)
+        print(f"wrote {path} ({len(content.splitlines())} lines)")
+    return t
+
+
+if __name__ == "__main__":
+    run()

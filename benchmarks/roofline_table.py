@@ -1,0 +1,65 @@
+"""Render the §Roofline table from benchmarks/results/*.json (written by
+repro.launch.dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "16x16", tag: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if len(parts) == 3:
+            a, s, m = parts
+            t = ""
+        elif len(parts) == 4:
+            a, s, m, t = parts
+        else:
+            continue
+        if m != mesh or (tag or "") != t:
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_table(recs, include_ideal: bool = True) -> str:
+    recs = [r for r in recs if r.get("shape") in SHAPE_ORDER]
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    hdr = ("| arch | shape | compute_s | memory_s | mem_ideal_s | coll_s | "
+           "dominant | useful | args_GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"SKIP | — | — |")
+            continue
+        args_gb = r.get("memory_stats", {}).get("argument_bytes", 0) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.2f} | {r.get('memory_ideal_s', 0):.3f} | "
+            f"{r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.2f} | {args_gb:.2f} |")
+    return hdr + "\n".join(lines)
+
+
+def run():
+    for mesh in ("16x16", "2x16x16"):
+        recs = load(mesh)
+        if not recs:
+            continue
+        print(f"\n# Roofline — mesh {mesh} ({len(recs)} pairs)")
+        print(fmt_table(recs))
+    return True
+
+
+if __name__ == "__main__":
+    run()

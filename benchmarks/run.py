@@ -1,0 +1,35 @@
+"""Benchmark driver — one section per paper table/figure.
+
+  Table 1  -> bench_dispatch       (sample-flow TCV + dispatch times)
+  Figure 7 -> bench_e2e            (end-to-end variant throughput)
+  Figure 9 -> bench_linearity      (cluster linearity, TD vs central)
+  Figure 10-> bench_reshard_memory (allgather-swap memory release)
+  kernels  -> bench_kernels        (fused-kernel micro-benchmarks)
+  Fig. 11  -> bench_moe_scale      (400B-class MoE at production scale)
+  roofline -> roofline_table       (renders benchmarks/results/*.json)
+
+``PYTHONPATH=src python -m benchmarks.run [section ...]``
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+SECTIONS = ["dispatch", "linearity", "reshard_memory", "kernels", "e2e",
+            "moe_scale", "roofline"]
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or SECTIONS
+    for name in wanted:
+        mod = __import__(f"benchmarks.bench_{name}"
+                         if name != "roofline" else "benchmarks.roofline_table",
+                         fromlist=["run"])
+        t0 = time.perf_counter()
+        print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
+        mod.run()
+        print(f"[{name}: {time.perf_counter() - t0:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end driver: GRPO-train a small model on the pattern rule-reward
+task until the reward climbs (the paper's Figure 8 at CPU scale).
+
+    PYTHONPATH=src python examples/grpo_train.py [--iterations 40]
+"""
+import argparse
+import json
+
+from repro.configs.base import ModelConfig, RLConfig
+from repro.core.trainer import GRPOTrainer
+from repro.data.prompts import PromptDataset, pattern_task
+
+# ~8M-param llama-family model — big enough to learn, small enough for CPU.
+CFG = ModelConfig(
+    name="grpo-demo-8m", arch_type="dense", num_layers=2, d_model=256,
+    vocab_size=512, num_heads=8, num_kv_heads=4, head_dim=32, d_ff=1024,
+    rope_theta=10_000.0, dtype="float32", remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iterations", type=int, default=40)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--algorithm", default="grpo", choices=["grpo", "dapo"])
+    ap.add_argument("--log-json", default=None)
+    args = ap.parse_args()
+
+    rl = RLConfig(algorithm=args.algorithm, num_generations=8,
+                  max_prompt_len=12, max_response_len=8, lr=3e-4,
+                  kl_coef=1e-3, temperature=1.0)
+    ds = PromptDataset(pattern_task(), max_prompt_len=12, seed=0)
+    tr = GRPOTrainer(CFG, rl, ds, num_nodes=4, seed=0, microbatch=64)
+
+    log, best = [], 0.0
+    for it in range(args.iterations):
+        st = tr.iteration(args.global_batch)
+        best = max(best, st.reward_mean)
+        log.append({"iteration": it, "reward": st.reward_mean,
+                    "loss": st.loss, "kl": st.kl})
+        print(f"[{it:3d}] reward={st.reward_mean:.3f} (best {best:.3f}) "
+              f"loss={st.loss:8.4f} kl={st.kl:.5f}")
+    if args.log_json:
+        with open(args.log_json, "w") as f:
+            json.dump(log, f, indent=1)
+    first = sum(r["reward"] for r in log[:5]) / 5
+    last = sum(r["reward"] for r in log[-5:]) / 5
+    print(f"\nmean reward: first-5 {first:.3f} -> last-5 {last:.3f}")
+    assert last > first, "reward did not improve"
+    print("reward improved — RL loop verified end-to-end")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Resharding-flow demo: the paper's Figure 5 walked step by step on a real
+model — naive reshard vs allgather-swap, with the per-device memory timeline
+and the modeled swap durations printed side by side.
+
+    PYTHONPATH=src python examples/reshard_demo.py --arch mixtral-8x7b
+"""
+import argparse
+
+import jax
+
+from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.core.resharding import Resharder, tree_device_bytes
+from repro.models.model import build_model
+from repro.sharding import param_specs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b", choices=ALL_ARCHS)
+    ap.add_argument("--paper-two-step", action="store_true",
+                    help="literal Figure-5 temp-buffer allgather")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch).replace(dtype="float32", remat=False)
+    model = build_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    t = param_specs(cfg, params, mesh, stage="train")
+    g = param_specs(cfg, params, mesh, stage="gen", gen_mode="tp")
+
+    for use_swap in (False, True):
+        name = "allgather-swap" if use_swap else "naive reshard"
+        rs = Resharder(mesh, t, g, use_swap=use_swap,
+                       paper_two_step=args.paper_two_step)
+        gen, stash, led = rs.to_generation(params)
+        print(f"\n== {name} ==")
+        for label, b in led.timeline():
+            print(f"  {label:35s} {b / 1e6:9.1f} MB/device")
+        if use_swap:
+            print(f"  D2H swap: {led.d2h_bytes / 1e6:.1f} MB "
+                  f"(modeled {led.swap_time_s * 1e3:.2f} ms @ 50 GB/s)")
+            back, led = rs.to_update(stash, led)
+            import numpy as np
+            for k_a, k_b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+                np.testing.assert_array_equal(np.asarray(k_a), np.asarray(k_b))
+            print("  H2D swap-back verified bit-exact")
+        else:
+            print(f"  redundant update partition held on device: "
+                  f"{rs.redundancy_bytes(params) / 1e6:.1f} MB "
+                  f"(Eq. 3 redundancy)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Pytree checkpointing: one .npz of leaves + a JSON treedef of paths.
+
+Arrays are fetched to host (fully replicated view) before writing; restore
+re-places them with ``jax.device_put`` against target shardings when given.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def save_pytree(path: str, tree, step: int | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    np.savez(path, **flat)
+    meta = {"keys": sorted(flat), "step": step}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_pytree(path: str, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching tree."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    shard_flat = (jax.tree.leaves(shardings) if shardings is not None
+                  else [None] * len(flat_like[0]))
+    for (pathk, leaf), sh in zip(flat_like[0], shard_flat):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in pathk)
+        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(flat_like[1], leaves)

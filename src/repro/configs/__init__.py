@@ -1,0 +1,54 @@
+"""Config registry.
+
+``get_config("mixtral-8x7b")`` returns the full assigned ModelConfig;
+``get_smoke_config(...)`` returns the reduced same-family variant used by the
+CPU smoke tests (<=2 layers, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    TPU_V5E,
+    HardwareConfig,
+    ModelConfig,
+    RLConfig,
+    ShapeConfig,
+)
+
+# arch id -> module name (dashes are not importable)
+_ARCH_MODULES = {
+    "mamba2-1.3b": "mamba2_1_3b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "starcoder2-7b": "starcoder2_7b",
+    "yi-6b": "yi_6b",
+    "stablelm-3b": "stablelm_3b",
+    "zamba2-7b": "zamba2_7b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "whisper-large-v3": "whisper_large_v3",
+    # the paper's own evaluation models
+    "qwen2.5-7b": "qwen2_5_7b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "qwen3-moe-30b": "qwen3_moe_30b",
+}
+
+ASSIGNED_ARCHS = list(_ARCH_MODULES)[:10]
+PAPER_ARCHS = list(_ARCH_MODULES)[10:]
+ALL_ARCHS = list(_ARCH_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ALL_ARCHS}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke()

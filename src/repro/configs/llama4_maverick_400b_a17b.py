@@ -1,0 +1,36 @@
+"""llama4-maverick-400b-a17b — MoE 128 experts top-1, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E family].
+
+48L d_model=5120 40H (kv=8, head_dim=128) expert d_ff=8192 vocab=202048.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    arch_type="moe",
+    num_layers=48,
+    d_model=5120,
+    vocab_size=202_048,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    num_experts=128,
+    experts_per_token=1,
+    rope_theta=5e5,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="llama4-smoke",
+        num_layers=2,
+        d_model=256,
+        vocab_size=512,
+        num_heads=8,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=512,
+        num_experts=4,
+        experts_per_token=1,
+    )

@@ -1,0 +1,32 @@
+"""mamba2-1.3b — SSD (state-space duality), attention-free [arXiv:2405.21060].
+
+48L d_model=2048, d_ff=0 (the Mamba2 block subsumes the MLP), vocab=50280,
+ssm_state=128, expand=2 (d_inner=4096), head_dim=64 -> 64 SSM heads.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    arch_type="ssm",
+    num_layers=48,
+    d_model=2048,
+    vocab_size=50280,
+    d_ff=0,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_ngroups=1,
+    ssm_conv_kernel=4,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="mamba2-smoke",
+        num_layers=2,
+        d_model=256,
+        vocab_size=512,
+        ssm_state=32,
+        ssm_head_dim=64,
+        ssm_chunk=32,
+    )

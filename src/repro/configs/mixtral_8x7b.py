@@ -1,0 +1,37 @@
+"""mixtral-8x7b — 8 experts top-2 MoE, GQA, sliding-window attn [arXiv:2401.04088].
+
+32L d_model=4096 32H (kv=8, head_dim=128) expert d_ff=14336 vocab=32000, SWA 4096.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    arch_type="moe",
+    num_layers=32,
+    d_model=4096,
+    vocab_size=32_000,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    num_experts=8,
+    experts_per_token=2,
+    rope_theta=1e6,
+    sliding_window=4096,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="mixtral-smoke",
+        num_layers=2,
+        d_model=256,
+        vocab_size=512,
+        num_heads=8,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=512,
+        num_experts=4,
+        experts_per_token=2,
+        sliding_window=64,
+    )

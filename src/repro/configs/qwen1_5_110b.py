@@ -1,0 +1,32 @@
+"""qwen1.5-110b — dense GQA with QKV bias [hf:Qwen/Qwen1.5 family].
+
+80L d_model=8192 64H (kv=8, head_dim=128) d_ff=49152 vocab=152064.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b",
+    arch_type="dense",
+    num_layers=80,
+    d_model=8192,
+    vocab_size=152_064,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=49152,
+    rope_theta=1e6,
+    qkv_bias=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="qwen1.5-smoke",
+        num_layers=2,
+        d_model=256,
+        vocab_size=512,
+        num_heads=8,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=512,
+    )

@@ -1,0 +1,32 @@
+"""qwen2.5-7b — the paper's own dense evaluation model [arXiv:2412.15115].
+
+28L d_model=3584 28H (kv=4, head_dim=128) d_ff=18944 vocab=152064, QKV bias.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-7b",
+    arch_type="dense",
+    num_layers=28,
+    d_model=3584,
+    vocab_size=152_064,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    rope_theta=1e6,
+    qkv_bias=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="qwen2.5-7b-smoke",
+        num_layers=2,
+        d_model=256,
+        vocab_size=512,
+        num_heads=8,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=512,
+    )

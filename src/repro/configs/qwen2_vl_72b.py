@@ -1,0 +1,40 @@
+"""qwen2-vl-72b — VLM backbone with M-RoPE [arXiv:2409.12191].
+
+80L d_model=8192 64H (kv=8, head_dim=128) d_ff=29568 vocab=152064.
+Vision frontend is a STUB per the carve-out: ``input_specs`` provides
+precomputed patch embeddings (vision_tokens, d_model); the backbone scatters
+them over the leading token positions and applies M-RoPE with 3-D position
+ids split (t,h,w)=(16,24,24) over the half head-dim.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    arch_type="vlm",
+    num_layers=80,
+    d_model=8192,
+    vocab_size=152_064,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    rope_theta=1e6,
+    qkv_bias=True,
+    mrope_sections=(16, 24, 24),
+    vision_tokens=256,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="qwen2-vl-smoke",
+        num_layers=2,
+        d_model=256,
+        vocab_size=512,
+        num_heads=8,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=512,
+        mrope_sections=(4, 6, 6),
+        vision_tokens=4,
+    )

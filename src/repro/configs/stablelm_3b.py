@@ -1,0 +1,32 @@
+"""stablelm-3b — dense, MHA (kv=32) [hf:stabilityai/stablelm-2-1_6b family].
+
+32L d_model=2560 32H (kv=32, head_dim=80) d_ff=6912 vocab=50304.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=2560,
+    vocab_size=50_304,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=80,
+    d_ff=6912,
+    rope_theta=10_000.0,
+    qkv_bias=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="stablelm-smoke",
+        num_layers=2,
+        d_model=256,
+        vocab_size=512,
+        num_heads=8,
+        num_kv_heads=8,
+        head_dim=32,
+        d_ff=512,
+    )

@@ -1,0 +1,36 @@
+"""starcoder2-7b — dense GQA + RoPE + sliding window [arXiv:2402.19173].
+
+32L d_model=4608 36H (kv=4, head_dim=128) d_ff=18432 vocab=49152.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=4608,
+    vocab_size=49_152,
+    num_heads=36,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18432,
+    rope_theta=1e5,
+    sliding_window=4096,
+    qkv_bias=True,
+    norm_type="layernorm",
+    mlp_type="gelu",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="starcoder2-smoke",
+        num_layers=2,
+        d_model=288,
+        vocab_size=512,
+        num_heads=9,
+        num_kv_heads=1,
+        head_dim=32,
+        d_ff=768,
+        sliding_window=64,
+    )

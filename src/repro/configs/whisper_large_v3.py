@@ -1,0 +1,42 @@
+"""whisper-large-v3 — encoder-decoder, conv frontend stubbed [arXiv:2212.04356].
+
+32 encoder + 32 decoder layers, d_model=1280 20H (MHA, head_dim=64)
+d_ff=5120 vocab=51866.  The mel-spectrogram + conv feature extractor is a
+STUB per the carve-out: ``input_specs`` provides 1500 precomputed frame
+embeddings of width d_model.  Decoder uses learned positions (no RoPE in
+whisper); we keep rope_theta for the shared layer code but disable rope via
+``rope_theta=0``.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    arch_type="audio",
+    num_layers=32,            # decoder layers
+    encoder_layers=32,
+    encoder_seq=1500,
+    d_model=1280,
+    vocab_size=51_866,
+    num_heads=20,
+    num_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    rope_theta=0.0,           # sinusoidal absolute positions (no RoPE)
+    norm_type="layernorm",
+    mlp_type="gelu",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="whisper-smoke",
+        num_layers=2,
+        encoder_layers=2,
+        encoder_seq=32,
+        d_model=256,
+        vocab_size=512,
+        num_heads=8,
+        num_kv_heads=8,
+        head_dim=32,
+        d_ff=512,
+    )

@@ -1,0 +1,31 @@
+"""yi-6b — llama-architecture dense GQA [arXiv:2403.04652].
+
+32L d_model=4096 32H (kv=4, head_dim=128) d_ff=11008 vocab=64000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=4096,
+    vocab_size=64_000,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    rope_theta=5e6,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="yi-smoke",
+        num_layers=2,
+        d_model=256,
+        vocab_size=512,
+        num_heads=8,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=512,
+    )

@@ -1,0 +1,41 @@
+"""zamba2-7b — hybrid: Mamba2 backbone + shared attention block [arXiv:2411.15242].
+
+81L d_model=3584 32H (kv=32, head_dim=112) d_ff=14336 vocab=32000, ssm_state=64.
+The single shared transformer block (MHA + MLP) is applied every
+``hybrid_attn_period`` mamba layers, reusing ONE weight set (weight aliasing —
+the resharding flow must gather it exactly once).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    arch_type="hybrid",
+    num_layers=81,
+    d_model=3584,
+    vocab_size=32_000,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_ngroups=2,
+    hybrid_attn_period=6,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(
+        name="zamba2-smoke",
+        num_layers=2,
+        d_model=256,
+        vocab_size=512,
+        num_heads=8,
+        num_kv_heads=8,
+        head_dim=32,
+        d_ff=512,
+        ssm_state=32,
+        ssm_chunk=32,
+        hybrid_attn_period=2,
+    )

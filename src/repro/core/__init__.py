@@ -1,0 +1,12 @@
+# The paper's primary contribution: distributed dataflow for RL training —
+# the transfer dock (sample flow) + allgather-swap (resharding flow), plus
+# the GRPO/PPO trainers and the generation engine that they orchestrate.
+from repro.core import grpo, ppo  # noqa: F401
+from repro.core.resharding import Resharder, naive_reshard  # noqa: F401
+from repro.core.rollout import RolloutEngine  # noqa: F401
+from repro.core.trainer import GRPOTrainer  # noqa: F401
+from repro.core.transfer_dock import (  # noqa: F401
+    CentralReplayBuffer,
+    DispatchLedger,
+    TransferDock,
+)

@@ -1,0 +1,102 @@
+"""GRPO / DAPO losses and the actor update step.
+
+The update step lowered by the dry-run is exactly this: a GRPO policy-gradient
+step over (prompt+response) sequences with group-relative advantages, PPO-style
+clipping (decoupled upper clip for DAPO) and a k3 KL penalty to the reference
+policy — the same loss MindSpeed RL trains Qwen2.5/Qwen3/DeepSeek with.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RLConfig
+from repro.models.model import build_model
+from repro.optim import adamw_update
+
+
+def token_logprobs(logits: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """logits: (B, S, V) where logits[:, t] predicts tokens[:, t+1].
+    Returns logp of the realized next tokens, shape (B, S-1), fp32.
+
+    Upcasts HERE (not in the model forward) so the backward cotangents
+    through the transformer stay in the compute dtype."""
+    lg = logits[:, :-1].astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)                   # (B, S-1)
+    tgt = jnp.take_along_axis(lg, tokens[:, 1:, None], axis=-1)[..., 0]
+    return tgt - lse
+
+
+def group_advantages(rewards: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """rewards: (G, N) — N responses per prompt.  Group-relative z-score."""
+    mean = jnp.mean(rewards, axis=1, keepdims=True)
+    std = jnp.std(rewards, axis=1, keepdims=True)
+    return (rewards - mean) / (std + eps)
+
+
+def grpo_loss(logp, old_logp, ref_logp, advantages, mask, rl: RLConfig):
+    """All per-token tensors are (B, T); advantages (B,); mask (B, T) float.
+
+    Returns (loss, metrics).  DAPO == decoupled clip (clip_eps_high) + no KL.
+    """
+    adv = advantages[:, None]
+    ratio = jnp.exp(logp - old_logp)
+    hi = rl.clip_eps_high if rl.algorithm == "dapo" else rl.clip_eps
+    s1 = ratio * adv
+    s2 = jnp.clip(ratio, 1.0 - rl.clip_eps, 1.0 + hi) * adv
+    pg = -jnp.minimum(s1, s2)
+    # k3 KL estimator (Schulman): unbiased, positive
+    dr = ref_logp - logp
+    kl = jnp.exp(dr) - dr - 1.0
+    kl_coef = 0.0 if rl.algorithm == "dapo" else rl.kl_coef
+    per_tok = pg + kl_coef * kl
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(per_tok * mask) / denom
+    metrics = {
+        "pg_loss": jnp.sum(pg * mask) / denom,
+        "kl": jnp.sum(kl * mask) / denom,
+        "ratio_mean": jnp.sum(ratio * mask) / denom,
+        "clip_frac": jnp.sum(((ratio < 1 - rl.clip_eps) |
+                              (ratio > 1 + hi)) * mask) / denom,
+    }
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, rl: RLConfig, lr_schedule=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch: tokens (B,S) int32, response_mask (B,S) f32 (1 on response tokens,
+    positions aligned with ``tokens``), advantages (B,), old_logp (B,S-1),
+    ref_logp (B,S-1) — plus family extras (frames / vision_embeds).
+    """
+    model = build_model(cfg)
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, cfg, batch)
+        logp = token_logprobs(logits, batch["tokens"])            # (B,S-1)
+        mask = batch["response_mask"][:, 1:].astype(jnp.float32)
+        loss, metrics = grpo_loss(
+            logp, batch["old_logp"], batch["ref_logp"],
+            batch["advantages"], mask, rl)
+        if cfg.is_moe:
+            loss = loss + cfg.router_aux_coef * aux
+            metrics["moe_aux"] = aux
+        if rl.entropy_coef:
+            # masked mean token entropy (cheap proxy via sampled logp)
+            metrics["neg_logp"] = -jnp.sum(logp * mask) / jnp.maximum(
+                jnp.sum(mask), 1.0)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        lr = (lr_schedule(opt_state.step) if lr_schedule is not None
+              else rl.lr)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr=lr, betas=rl.betas,
+            weight_decay=rl.weight_decay, grad_clip=rl.grad_clip)
+        metrics = dict(metrics, loss=loss,
+                       grad_step=opt_state.step.astype(jnp.float32))
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,162 @@
+"""Partial rollout (paper Table 2) — long-tail generation split across
+iterations.
+
+Each iteration the actor generates at most ``budget`` tokens per sequence.
+Sequences that emit EOS (or exhaust the total response cap) are FINISHED and
+flow to inference/update through the transfer dock; the rest are stashed in
+the dock as partials and resumed FIRST next iteration (re-prefilled under the
+then-current weights — the mild off-policy prefix that partial rollout
+accepts by design).  GRPO group advantages are computed per COMPLETE group
+only, so groups whose members span iterations simply wait in the warehouses —
+the dock's readiness metadata handles this for free, which is exactly the
+paper's argument for a dataflow-level scheduler.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grpo
+from repro.core.trainer import GRPOTrainer, IterationStats
+
+
+class PartialRolloutTrainer(GRPOTrainer):
+    def __init__(self, *args, budget: int = 8, **kw):
+        super().__init__(*args, **kw)
+        self.budget = budget
+        self.partials: dict[int, dict] = {}   # idx -> {tokens, ngen}
+        self._next_idx = 0
+        self._meta: dict[int, dict] = {}
+        self._group_rewards: dict[int, dict[int, float]] = defaultdict(dict)
+
+    # -- helpers --------------------------------------------------------
+    def _finish(self, idx: int, tokens_row: np.ndarray, ngen: int, pl: int):
+        cap = pl + self.rl.max_response_len
+        row = np.full((cap,), self.tok.pad_id, np.int32)
+        row[:len(tokens_row)] = tokens_row[:cap]
+        mask = np.zeros((cap,), np.float32)
+        mask[pl:pl + ngen] = 1.0
+        self.dock.put("tokens", [idx], row[None], src_node=0)
+        self.dock.put("response_mask", [idx], mask[None], src_node=0)
+
+    # -- main loop ------------------------------------------------------
+    def iteration(self, global_batch: int) -> IterationStats:
+        cfg, rl = self.cfg, self.rl
+        G, N = global_batch, rl.num_generations
+        pl = rl.max_prompt_len
+
+        # enqueue fresh prompts (persistent indices across iterations)
+        prompts, _, metas = self.dataset.sample(G)
+        fresh = []
+        for i in range(G):
+            for _ in range(N):
+                idx = self._next_idx
+                self._next_idx += 1
+                self._meta[idx] = metas[i]
+                row = np.full((pl,), self.tok.pad_id, np.int32)
+                row[:] = prompts[i]
+                self.partials[idx] = {"tokens": row, "ngen": 0}
+                fresh.append(idx)
+
+        gen_params, stash, reshard_led = self.resharder.to_generation(
+            self.params)
+        del self.params
+
+        # ---- generation stage: resume buckets of equal prefix length ----
+        t0 = time.perf_counter()
+        buckets = defaultdict(list)
+        for idx, st in self.partials.items():
+            buckets[len(st["tokens"])].append(idx)
+        finished = []
+        for plen, idxs in sorted(buckets.items()):
+            batch = np.stack([self.partials[i]["tokens"] for i in idxs])
+            self.key, k = jax.random.split(self.key)
+            eng = self.actor.engine
+            eng.max_new = self.budget
+            roll = eng.generate(gen_params, batch, k)
+            for j, idx in enumerate(idxs):
+                st = self.partials[idx]
+                n = int(roll.lengths[j])
+                new_tokens = roll.tokens[j, plen:plen + n]
+                st["tokens"] = np.concatenate([st["tokens"], new_tokens])
+                st["ngen"] += n
+                hit_eos = bool((new_tokens == self.tok.eos_id).any())
+                done = hit_eos or st["ngen"] >= rl.max_response_len
+                if done:
+                    self._finish(idx, st["tokens"], st["ngen"], pl)
+                    finished.append(idx)
+                    del self.partials[idx]
+        gen_time = time.perf_counter() - t0
+        del gen_params
+        self.params, reshard_led = self.resharder.to_update(stash, reshard_led)
+
+        # ---- inference + reward on finished samples ---------------------
+        t0 = time.perf_counter()
+        rewards_seen = []
+        if finished:
+            toks = self.dock.get("actor_inference", "tokens", finished, 0)
+            old_logp = self.actor.old_logprobs(self.params, toks)
+            self.dock.put("old_logp", finished, old_logp, src_node=0)
+            ref_logp = self.ref.logprobs(toks)
+            self.dock.put("ref_logp", finished, ref_logp,
+                          src_node=self.ref.node)
+            rw = self.reward.score([self._meta[i] for i in finished], toks, pl)
+            rewards_seen = list(rw)
+            for idx, r in zip(finished, rw):
+                self._group_rewards[idx // N][idx] = float(r)
+
+        # advantages for COMPLETE groups only
+        ready_updates = []
+        for gid, members in list(self._group_rewards.items()):
+            if len(members) == N:
+                rs = np.array([members[i] for i in sorted(members)],
+                              np.float32)
+                adv = np.asarray(
+                    grpo.group_advantages(jnp.asarray(rs[None]))).reshape(-1)
+                idxs = sorted(members)
+                self.dock.put("advantages", idxs, adv[:, None], src_node=0)
+                ready_updates.extend(idxs)
+                del self._group_rewards[gid]
+        infer_time = time.perf_counter() - t0
+
+        # ---- update stage -----------------------------------------------
+        t0 = time.perf_counter()
+        losses, kls = [], []
+        if ready_updates:
+            sel = ready_updates
+            batch = {
+                "tokens": jnp.asarray(self.dock.get(
+                    "actor_update", "tokens", sel, 0)),
+                "response_mask": jnp.asarray(self.dock.get(
+                    "actor_update", "response_mask", sel, 0)),
+                "old_logp": jnp.asarray(self.dock.get(
+                    "actor_update", "old_logp", sel, 0)),
+                "ref_logp": jnp.asarray(self.dock.get(
+                    "actor_update", "ref_logp", sel, 0)),
+                "advantages": jnp.asarray(self.dock.get(
+                    "actor_update", "advantages", sel, 0))[:, 0],
+            }
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            kls.append(float(metrics["kl"]))
+            self.dock.mark_consumed("actor_update", sel)
+        update_time = time.perf_counter() - t0
+
+        return IterationStats(
+            reward_mean=float(np.mean(rewards_seen)) if rewards_seen else 0.0,
+            reward_std=float(np.std(rewards_seen)) if rewards_seen else 0.0,
+            loss=float(np.mean(losses)) if losses else 0.0,
+            kl=float(np.mean(kls)) if kls else 0.0,
+            gen_time=gen_time, infer_time=infer_time, update_time=update_time,
+            reshard=reshard_led.snapshot(),
+            dispatch=self.dock.ledger.snapshot(),
+        )
+
+    @property
+    def pending_partials(self) -> int:
+        return len(self.partials)

@@ -1,0 +1,123 @@
+"""PPO trainer — actor-critic RLHF over the same MindSpeed-RL dataflow.
+
+Differences from GRPO (`trainer.py`): a value head on the actor trunk
+(critic), token-level KL-shaped rewards, GAE advantages, and the PPO clipped
+value loss.  PF-PPO (policy filtration) reweights rollouts by reward rank.
+The sample flow still moves through the transfer dock and the weights through
+the allgather-swap resharder — the dataflow layer is algorithm-agnostic,
+which is the point of the paper's architecture (Fig. 6).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RLConfig
+from repro.core import grpo, ppo
+from repro.core.resharding import Resharder
+from repro.core.trainer import GRPOTrainer, IterationStats
+from repro.models.model import build_model
+from repro.optim import adamw_init
+
+
+class PPOTrainer(GRPOTrainer):
+    def __init__(self, cfg: ModelConfig, rl: RLConfig, dataset, *,
+                 pf_filter: bool = False, **kw):
+        rl = rl.replace(algorithm="ppo")
+        super().__init__(cfg, rl, dataset, **kw)
+        self.pf = pf_filter
+        key = jax.random.PRNGKey(kw.get("seed", 0) + 17)
+        self.params = ppo.add_value_head(self.params, cfg, key)
+        self.opt_state = adamw_init(self.params)
+        self.train_step = jax.jit(ppo.make_train_step(cfg, rl),
+                                  donate_argnums=(0, 1))
+        self._values = jax.jit(self._values_impl)
+        # the resharder must carry the value head too
+        from repro.sharding import param_specs
+        tspecs = param_specs(cfg, self.params, self.mesh, stage="train")
+        gspecs = param_specs(cfg, self.params, self.mesh, stage="gen",
+                             gen_mode="tp")
+        self.resharder = Resharder(self.mesh, tspecs, gspecs,
+                                   use_swap=rl.use_allgather_swap)
+
+    def _values_impl(self, params, batch):
+        return ppo.value_forward(params, self.cfg, batch)
+
+    def iteration(self, global_batch: int) -> IterationStats:
+        cfg, rl = self.cfg, self.rl
+        G = global_batch
+        self.dock.clear()
+        prompts, plens, metas = self.dataset.sample(G)
+        pl = prompts.shape[1]
+        idxs = list(range(G))
+        self.dock.put("prompt", idxs, prompts, src_node=0)
+
+        gen_params, stash, reshard_led = self.resharder.to_generation(
+            self.params)
+        del self.params
+
+        t0 = time.perf_counter()
+        ready = self.dock.request_metadata("actor_generation", ["prompt"])
+        pb = self.dock.get("actor_generation", "prompt", ready, dst_node=0)
+        self.key, k = jax.random.split(self.key)
+        roll = self.actor.generate(gen_params, pb, k)
+        self.dock.put("tokens", ready, roll.tokens, src_node=0)
+        self.dock.put("response_mask", ready, roll.response_mask, src_node=0)
+        self.dock.mark_consumed("actor_generation", ready)
+        gen_time = time.perf_counter() - t0
+        del gen_params
+        self.params, reshard_led = self.resharder.to_update(stash, reshard_led)
+
+        # inference stage: old logp, values, ref logp, rewards
+        t0 = time.perf_counter()
+        toks = self.dock.get("actor_inference", "tokens", idxs, dst_node=0)
+        mask = self.dock.get("actor_inference", "response_mask", idxs, 0)
+        batch = {"tokens": jnp.asarray(toks)}
+        old_logp = self.actor.old_logprobs(self.params, toks)
+        values = np.asarray(self._values(self.params, batch), np.float32)
+        ref_logp = self.ref.logprobs(toks)
+        rewards = self.reward.score(metas, toks, pl)
+
+        # token-level shaped rewards: -kl per token + terminal task reward
+        kl = old_logp - ref_logp                           # (G, S-1)
+        tok_rewards = -rl.kl_coef * kl
+        m = mask[:, 1:]
+        last = np.maximum(m.cumsum(1).argmax(1), 0)
+        tok_rewards[np.arange(G), last] += rewards
+        adv, ret = ppo.gae(jnp.asarray(tok_rewards),
+                           jnp.asarray(values[:, 1:] * m),
+                           jnp.asarray(m), rl.gamma, rl.gae_lambda)
+        adv = np.asarray(adv)
+        if self.pf:
+            w = np.asarray(ppo.pf_filter(jnp.asarray(rewards)))
+            adv = adv * w[:, None]
+        pad = lambda a: np.concatenate(
+            [np.zeros((G, 1), np.float32), a], axis=1)
+        infer_time = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        tb = {
+            "tokens": jnp.asarray(toks),
+            "response_mask": jnp.asarray(mask),
+            "old_logp": jnp.asarray(old_logp),
+            "values": jnp.asarray(pad(np.asarray(values[:, 1:]))),
+            "old_values": jnp.asarray(pad(np.asarray(values[:, 1:]))),
+            "advantages_tok": jnp.asarray(pad(adv)),
+            "returns": jnp.asarray(pad(np.asarray(ret))),
+        }
+        self.params, self.opt_state, metrics = self.train_step(
+            self.params, self.opt_state, tb)
+        update_time = time.perf_counter() - t0
+
+        return IterationStats(
+            reward_mean=float(np.mean(rewards)),
+            reward_std=float(np.std(rewards)),
+            loss=float(metrics["loss"]),
+            kl=float(np.mean(np.abs(kl * m))),
+            gen_time=gen_time, infer_time=infer_time, update_time=update_time,
+            reshard=reshard_led.snapshot(),
+            dispatch=self.dock.ledger.snapshot(),
+        )

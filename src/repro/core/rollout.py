@@ -1,0 +1,119 @@
+"""Generation engine (the vLLM-Ascend analogue, JAX-native).
+
+Batched synchronized decode: one jitted prefill over the padded prompts, then
+a host loop of jitted single-token steps with donated cache (in-place on
+device).  Sampling is temperature/greedy with per-sequence EOS stopping.
+
+The engine operates on whatever weight layout ``core/resharding.py`` produced
+for the generation stage — weights and cache are never copied host-side here.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import build_model
+
+
+@dataclass
+class RolloutResult:
+    tokens: np.ndarray          # (B, prompt+new) int32, PAD after EOS
+    response_mask: np.ndarray   # (B, prompt+new) 1.0 on generated tokens
+    gen_logp: np.ndarray        # (B, new) logp of sampled tokens (engine-side)
+    lengths: np.ndarray         # (B,) #generated tokens (incl. EOS)
+
+
+class RolloutEngine:
+    def __init__(self, cfg: ModelConfig, *, max_new: int, eos_id: int,
+                 pad_id: int, temperature: float = 1.0, greedy: bool = False):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.max_new = max_new
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.temperature = temperature
+        self.greedy = greedy
+        self._prefill = jax.jit(self._prefill_impl)
+        self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+
+    # -- jitted pieces ------------------------------------------------------
+    def _prefill_impl(self, params, batch, cache):
+        return self.model.prefill(params, self.cfg, batch, cache)
+
+    def _step_impl(self, params, cache, tok, pos, key, done):
+        logits, cache = self.model.decode(params, self.cfg, cache, tok, pos)
+        logits = logits / max(self.temperature, 1e-6)
+        logp_all = jax.nn.log_softmax(logits, axis=-1)
+        if self.greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            nxt = jax.random.categorical(key, logits, axis=-1)
+        lp = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
+        nxt = jnp.where(done, self.pad_id, nxt)
+        lp = jnp.where(done, 0.0, lp)
+        done = done | (nxt == self.eos_id)
+        return cache, nxt.astype(jnp.int32), lp, done
+
+    # -- public API ---------------------------------------------------------
+    def generate(self, params, prompts: np.ndarray, key,
+                 extras: dict | None = None) -> RolloutResult:
+        """prompts: (B, PL) int32 padded.  Synchronized batch decode."""
+        cfg = self.cfg
+        b, pl = prompts.shape
+        cap = pl + self.max_new
+        cache = self.model.init_cache(cfg, b, cap)
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extras:
+            batch.update(extras)
+        logits, cache = self._prefill(params, batch, cache)
+
+        logits = logits / max(self.temperature, 1e-6)
+        logp_all = jax.nn.log_softmax(logits, axis=-1)
+        key, k0 = jax.random.split(key)
+        if self.greedy:
+            tok = jnp.argmax(logits, axis=-1)
+        else:
+            tok = jax.random.categorical(k0, logits, axis=-1)
+        lp = jnp.take_along_axis(logp_all, tok[:, None], axis=-1)[:, 0]
+        done = tok == self.eos_id
+        toks = [np.asarray(tok, np.int32)]
+        lps = [np.asarray(lp, np.float32)]
+        tok = tok.astype(jnp.int32)
+
+        for t in range(1, self.max_new):
+            key, k = jax.random.split(key)
+            cache, tok, lp, done = self._step(
+                params, cache, tok[:, None], jnp.int32(pl + t - 1), k, done)
+            toks.append(np.asarray(tok, np.int32))
+            lps.append(np.asarray(lp, np.float32))
+            if bool(np.all(np.asarray(done))):
+                break
+
+    # -- assemble host-side result ------------------------------------------
+        gen = np.stack(toks, axis=1)                        # (B, T)
+        gen_logp = np.stack(lps, axis=1)
+        tconc = np.full((b, cap), self.pad_id, np.int32)
+        tconc[:, :pl] = prompts
+        tconc[:, pl:pl + gen.shape[1]] = gen
+        mask = np.zeros((b, cap), np.float32)
+        lengths = np.zeros((b,), np.int32)
+        for i in range(b):
+            row = gen[i]
+            stop = np.where(row == self.eos_id)[0]
+            n = (stop[0] + 1) if len(stop) else gen.shape[1]
+            mask[i, pl:pl + n] = 1.0
+            lengths[i] = n
+            tconc[i, pl + n:] = self.pad_id
+        return RolloutResult(tokens=tconc, response_mask=mask,
+                             gen_logp=gen_logp, lengths=lengths)
+
+
+@functools.lru_cache(maxsize=8)
+def _engine_cache(cfg, max_new, eos, pad, temp, greedy):
+    return RolloutEngine(cfg, max_new=max_new, eos_id=eos, pad_id=pad,
+                         temperature=temp, greedy=greedy)

@@ -1,0 +1,224 @@
+"""GRPO trainer — the full MindSpeed-RL iteration:
+
+  generation stage  -> inference stage -> update stage
+        ^                                     |
+        +---- resharding flow (allgather-swap) ----+
+
+with the sample flow routed through the distributed transfer dock.  Runs for
+real on CPU at smoke scale (the end-to-end examples) and is the template the
+launch layer lowers at production scale.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RLConfig
+from repro.core import grpo
+from repro.core.resharding import Resharder
+from repro.core.transfer_dock import (CentralReplayBuffer, DispatchLedger,
+                                      TransferDock)
+from repro.core.workers import ActorWorker, ReferenceWorker, RewardWorker
+from repro.data.prompts import PromptDataset
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import build_model
+from repro.optim import adamw_init
+from repro.sharding import param_specs
+
+
+@dataclass
+class IterationStats:
+    reward_mean: float
+    reward_std: float
+    loss: float
+    kl: float
+    gen_time: float
+    infer_time: float
+    update_time: float
+    reshard: dict = field(default_factory=dict)
+    dispatch: dict = field(default_factory=dict)
+
+
+class GRPOTrainer:
+    def __init__(self, cfg: ModelConfig, rl: RLConfig, dataset: PromptDataset,
+                 *, num_nodes: int = 4, microbatch: int = 0, seed: int = 0,
+                 mesh=None):
+        assert cfg.vocab_size >= ByteTokenizer.vocab_size
+        self.cfg = cfg
+        self.rl = rl
+        self.dataset = dataset
+        self.key = jax.random.PRNGKey(seed)
+        self.tok = dataset.tok
+        self.microbatch = microbatch
+
+        # --- model / optimizer state -----------------------------------
+        model = build_model(cfg)
+        self.key, k = jax.random.split(self.key)
+        self.params = model.init(cfg, k)
+        # genuine copy: train_step donates self.params' buffers, so the
+        # frozen reference policy must own distinct ones
+        self.ref_params = jax.tree.map(jnp.copy, self.params)
+        self.opt_state = adamw_init(self.params)
+        self.train_step = jax.jit(grpo.make_train_step(cfg, rl),
+                                  donate_argnums=(0, 1))
+
+        # --- distribution -----------------------------------------------
+        self.mesh = mesh or jax.make_mesh(
+            (1, 1), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        tspecs = param_specs(cfg, self.params, self.mesh, stage="train")
+        gspecs = param_specs(cfg, self.params, self.mesh, stage="gen",
+                             gen_mode="tp")
+        self.resharder = Resharder(self.mesh, tspecs, gspecs,
+                                   use_swap=rl.use_allgather_swap)
+
+        # --- workers + dock ----------------------------------------------
+        self.actor = ActorWorker(cfg, rl, eos_id=self.tok.eos_id,
+                                 pad_id=self.tok.pad_id, node=0)
+        self.ref = ReferenceWorker(cfg, self.ref_params, node=1 % num_nodes)
+        self.reward = RewardWorker(dataset, node=2 % num_nodes)
+        states = {
+            "actor_generation": 0,
+            "actor_inference": 0,
+            "ref_inference": self.ref.node,
+            "reward": self.reward.node,
+            "actor_update": 0,
+        }
+        ledger = DispatchLedger(internode_bw=rl.internode_bw)
+        if rl.use_transfer_dock:
+            self.dock = TransferDock(min(rl.num_warehouses, num_nodes),
+                                     states, ledger)
+        else:
+            self.dock = CentralReplayBuffer(states, ledger)
+
+    # ------------------------------------------------------------------
+    def iteration(self, global_batch: int) -> IterationStats:
+        """One RL iteration over G prompts × N generations."""
+        cfg, rl = self.cfg, self.rl
+        G, N = global_batch, rl.num_generations
+        total = G * N
+        self.dock.clear()
+
+        prompts, plens, metas = self.dataset.sample(G)
+        pl = prompts.shape[1]
+        prompts_rep = np.repeat(prompts, N, axis=0)
+        metas_rep = [metas[i // N] for i in range(total)]
+        idxs = list(range(total))
+        self.dock.put("prompt", idxs, prompts_rep, src_node=0)
+
+        # ---- resharding flow: update layout -> generation layout -------
+        gen_params, stash, reshard_led = self.resharder.to_generation(
+            self.params)
+        del self.params  # paper semantics: update buffers leave the device
+
+        # ---- generation stage ------------------------------------------
+        t0 = time.perf_counter()
+        ready = self.dock.request_metadata("actor_generation", ["prompt"])
+        pbatch = self.dock.get("actor_generation", "prompt", ready,
+                               dst_node=self.actor.node)
+        self.key, k = jax.random.split(self.key)
+        rollout = self.actor.generate(gen_params, pbatch, k)
+        self.dock.put("tokens", ready, rollout.tokens, src_node=self.actor.node)
+        self.dock.put("response_mask", ready, rollout.response_mask,
+                      src_node=self.actor.node)
+        self.dock.mark_consumed("actor_generation", ready)
+        gen_time = time.perf_counter() - t0
+        del gen_params
+
+        # ---- H2D swap back, overlapped with the inference stage --------
+        self.params, reshard_led = self.resharder.to_update(
+            stash, reshard_led)
+
+        # ---- inference stage --------------------------------------------
+        t0 = time.perf_counter()
+        ready = self.dock.request_metadata("actor_inference", ["tokens"])
+        toks = self.dock.get("actor_inference", "tokens", ready, dst_node=0)
+        old_logp = self.actor.old_logprobs(self.params, toks)
+        self.dock.put("old_logp", ready, old_logp, src_node=0)
+        self.dock.mark_consumed("actor_inference", ready)
+
+        # ref-inference and reward are independent consumers of the same
+        # samples; with stage fusion (paper Table 2) they run CONCURRENTLY —
+        # ref's jitted forward releases the GIL while the rule reward scores
+        # on the host.
+        ready_ref = self.dock.request_metadata("ref_inference", ["tokens"])
+        toks_ref = self.dock.get("ref_inference", "tokens", ready_ref,
+                                 dst_node=self.ref.node)
+        ready_rw = self.dock.request_metadata("reward", ["tokens"])
+        toks_rw = self.dock.get("reward", "tokens", ready_rw,
+                                dst_node=self.reward.node)
+        if self.rl.stage_fusion:
+            from concurrent.futures import ThreadPoolExecutor
+
+            with ThreadPoolExecutor(max_workers=2) as ex:
+                f_ref = ex.submit(self.ref.logprobs, toks_ref)
+                f_rw = ex.submit(self.reward.score,
+                                 [metas_rep[i] for i in ready_rw],
+                                 toks_rw, pl)
+                ref_logp, rewards = f_ref.result(), f_rw.result()
+        else:
+            ref_logp = self.ref.logprobs(toks_ref)
+            rewards = self.reward.score([metas_rep[i] for i in ready_rw],
+                                        toks_rw, pl)
+        self.dock.put("ref_logp", ready_ref, ref_logp, src_node=self.ref.node)
+        self.dock.mark_consumed("ref_inference", ready_ref)
+        ready = ready_rw
+        adv = np.asarray(
+            grpo.group_advantages(jnp.asarray(rewards.reshape(G, N)))
+        ).reshape(-1)
+        self.dock.put("advantages", ready, adv[:, None],
+                      src_node=self.reward.node)
+        self.dock.mark_consumed("reward", ready)
+        infer_time = time.perf_counter() - t0
+
+        # ---- update stage ------------------------------------------------
+        t0 = time.perf_counter()
+        ready = self.dock.request_metadata(
+            "actor_update",
+            ["tokens", "response_mask", "old_logp", "ref_logp", "advantages"])
+        mb = self.microbatch or len(ready)
+        losses, kls = [], []
+        for lo in range(0, len(ready), mb):
+            sel = ready[lo:lo + mb]
+            batch = {
+                "tokens": jnp.asarray(self.dock.get(
+                    "actor_update", "tokens", sel, 0)),
+                "response_mask": jnp.asarray(self.dock.get(
+                    "actor_update", "response_mask", sel, 0)),
+                "old_logp": jnp.asarray(self.dock.get(
+                    "actor_update", "old_logp", sel, 0)),
+                "ref_logp": jnp.asarray(self.dock.get(
+                    "actor_update", "ref_logp", sel, 0)),
+                "advantages": jnp.asarray(self.dock.get(
+                    "actor_update", "advantages", sel, 0))[:, 0],
+            }
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            kls.append(float(metrics["kl"]))
+        self.dock.mark_consumed("actor_update", ready)
+        update_time = time.perf_counter() - t0
+
+        return IterationStats(
+            reward_mean=float(np.mean(rewards)),
+            reward_std=float(np.std(rewards)),
+            loss=float(np.mean(losses)),
+            kl=float(np.mean(kls)),
+            gen_time=gen_time,
+            infer_time=infer_time,
+            update_time=update_time,
+            reshard=reshard_led.snapshot(),
+            dispatch=self.dock.ledger.snapshot(),
+        )
+
+    def throughput(self, stats: IterationStats, global_batch: int,
+                   num_devices: int = 1) -> float:
+        """Paper Eq. (5): T = G*N*(PL+SL) / ND / ETE."""
+        ete = stats.gen_time + stats.infer_time + stats.update_time
+        toks = (global_batch * self.rl.num_generations
+                * (self.rl.max_prompt_len + self.rl.max_response_len))
+        return toks / max(num_devices, 1) / max(ete, 1e-9)

@@ -1,0 +1,216 @@
+"""Distributed Transfer Dock (TD) — the paper's sample-flow contribution.
+
+The conventional centralized replay buffer is split into:
+
+  * ``TDWarehouse``  — S shards of the sample store, sharded along the global
+    batch dimension (sample index % S); one warehouse per node.
+  * ``TDController`` — one per WORKER STATE (actor-generation,
+    actor-inference, ref-inference, reward, actor-update, ...), holding only
+    metadata: which sample indices have which fields ready, and which
+    warehouse owns them.  Controllers are co-located with their worker, so
+    metadata requests are intranode.
+
+Every byte movement is recorded in a ``DispatchLedger`` with the paper's
+bandwidth model (300 MB/s inter-server by default), so benchmarks can
+reproduce Table 1 / Figure 9 while the SAME code path does the real (numpy)
+data movement for the CPU-scale end-to-end examples.
+
+``CentralReplayBuffer`` is the baseline: one warehouse pinned to node 0 and a
+single controller, so every worker request crosses the network (unless the
+worker sits on node 0) — the K1.5-style design the paper improves on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+META_SCALAR_BYTES = 4      # paper: metadata are int32 scalars
+META_PER_SAMPLE = 3        # sample idx, warehouse idx, ready bitmap
+
+
+@dataclass
+class DispatchLedger:
+    internode_bytes: int = 0
+    intranode_bytes: int = 0
+    metadata_bytes: int = 0
+    metadata_msgs: int = 0
+    requests: int = 0
+    internode_bw: float = 300e6
+    metadata_latency: float = 1e-4     # per metadata round-trip (Ray-like RPC)
+    per_node_bytes: dict = field(default_factory=dict)  # warehouse-node load
+
+    def record(self, nbytes: int, cross: bool, node: int = 0):
+        if cross:
+            self.internode_bytes += nbytes
+            self.per_node_bytes[node] = (
+                self.per_node_bytes.get(node, 0) + nbytes)
+        else:
+            self.intranode_bytes += nbytes
+        self.requests += 1
+
+    def record_meta(self, nbytes: int, msgs: int = 1):
+        self.metadata_bytes += nbytes
+        self.metadata_msgs += msgs
+
+    @property
+    def simulated_dispatch_time(self) -> float:
+        """Seconds the sample flow takes at the modeled bandwidth.  Warehouses
+        serve in PARALLEL, so the wall time is the max per-node load — this is
+        what makes S warehouses ~S× faster than the centralized buffer."""
+        busiest = max(self.per_node_bytes.values(), default=0)
+        return (busiest / self.internode_bw
+                + self.metadata_msgs * self.metadata_latency)
+
+    def snapshot(self) -> dict:
+        return {
+            "internode_bytes": self.internode_bytes,
+            "intranode_bytes": self.intranode_bytes,
+            "metadata_bytes": self.metadata_bytes,
+            "metadata_msgs": self.metadata_msgs,
+            "requests": self.requests,
+            "per_node_bytes": dict(self.per_node_bytes),
+            "simulated_dispatch_time_s": self.simulated_dispatch_time,
+        }
+
+
+class TDWarehouse:
+    def __init__(self, node: int):
+        self.node = node
+        self.store: dict[str, dict[int, np.ndarray]] = {}
+
+    def put(self, fld: str, idx: int, row: np.ndarray):
+        self.store.setdefault(fld, {})[idx] = row
+
+    def get(self, fld: str, idx: int) -> np.ndarray:
+        return self.store[fld][idx]
+
+    def clear(self):
+        self.store.clear()
+
+
+class TDController:
+    """Metadata for ONE worker state: which samples are ready/consumed."""
+
+    def __init__(self, state: str, node: int):
+        self.state = state
+        self.node = node
+        self.ready: dict[int, set] = {}
+        self.consumed: set = set()
+
+    def on_meta(self, idx: int, fld: str):
+        self.ready.setdefault(idx, set()).add(fld)
+
+    def available(self, fields, limit: int | None = None) -> list[int]:
+        need = set(fields)
+        out = [i for i, f in sorted(self.ready.items())
+               if need <= f and i not in self.consumed]
+        return out if limit is None else out[:limit]
+
+
+class TransferDock:
+    """S warehouses + one controller per worker state."""
+
+    name = "transfer_dock"
+
+    def __init__(self, num_warehouses: int, states: dict[str, int],
+                 ledger: DispatchLedger | None = None):
+        """states: worker-state name -> node id it runs on."""
+        self.S = num_warehouses
+        self.warehouses = [TDWarehouse(node=w) for w in range(num_warehouses)]
+        self.controllers = {s: TDController(s, node) for s, node in
+                            states.items()}
+        self.ledger = ledger or DispatchLedger()
+
+    # -- routing ------------------------------------------------------------
+    def _wh(self, idx: int) -> TDWarehouse:
+        return self.warehouses[idx % self.S]
+
+    # -- data plane ---------------------------------------------------------
+    def put(self, fld: str, idxs, rows, src_node: int):
+        """rows: array (n, ...) or list of per-sample arrays."""
+        for j, idx in enumerate(idxs):
+            row = np.asarray(rows[j])
+            wh = self._wh(idx)
+            self.ledger.record(row.nbytes, cross=wh.node != src_node,
+                               node=wh.node)
+            wh.put(fld, int(idx), row)
+        # warehouse broadcasts metadata to ALL controllers (paper step 3)
+        nctl = len(self.controllers)
+        self.ledger.record_meta(
+            len(idxs) * META_PER_SAMPLE * META_SCALAR_BYTES * nctl, msgs=nctl)
+        for ctl in self.controllers.values():
+            for idx in idxs:
+                ctl.on_meta(int(idx), fld)
+
+    def get(self, state: str, fld: str, idxs, dst_node: int) -> np.ndarray:
+        rows = []
+        for idx in idxs:
+            wh = self._wh(int(idx))
+            row = wh.get(fld, int(idx))
+            self.ledger.record(row.nbytes, cross=wh.node != dst_node,
+                               node=wh.node)
+            rows.append(row)
+        return np.stack(rows)
+
+    # -- metadata plane -----------------------------------------------------
+    def request_metadata(self, state: str, fields, limit: int | None = None):
+        ctl = self.controllers[state]
+        # controller co-located with worker: metadata request is intranode,
+        # but still a message (counted; zero internode bytes)
+        self.ledger.record_meta(META_PER_SAMPLE * META_SCALAR_BYTES, msgs=0)
+        return ctl.available(fields, limit)
+
+    def mark_consumed(self, state: str, idxs):
+        self.controllers[state].consumed.update(int(i) for i in idxs)
+
+    def clear(self):
+        for wh in self.warehouses:
+            wh.clear()
+        for ctl in self.controllers.values():
+            ctl.ready.clear()
+            ctl.consumed.clear()
+
+
+class CentralReplayBuffer(TransferDock):
+    """Baseline: ONE warehouse on node 0, one shared controller on node 0 —
+    every metadata request from a worker on node != 0 crosses the network."""
+
+    name = "central_replay_buffer"
+
+    def __init__(self, states: dict[str, int],
+                 ledger: DispatchLedger | None = None):
+        super().__init__(1, states, ledger)
+        self._states = states
+
+    def request_metadata(self, state: str, fields, limit: int | None = None):
+        ctl = self.controllers[state]
+        cross = self._states[state] != 0
+        self.ledger.record_meta(META_PER_SAMPLE * META_SCALAR_BYTES, msgs=1)
+        if cross:
+            self.ledger.record(META_PER_SAMPLE * META_SCALAR_BYTES, cross=True)
+        return ctl.available(fields, limit)
+
+
+# ---------------------------------------------------------------------------
+# Analytic dispatch model — Eqs. (1), (2), (4) and Table 1 of the paper.
+# ---------------------------------------------------------------------------
+
+def cv_gb(G: int, N: int, B: int, PL: int, n: int, SL: int, M: int) -> float:
+    """Eq. (1): one update-stage fetch, in GB."""
+    return G * N * B * (PL + n * SL + M) / 1024 ** 3
+
+
+def tcv_gb(G: int, N: int, B: int, PL: int, n: int, SL: int, M: int) -> float:
+    """Eq. (2): total sample-flow volume of the last 3 pipeline steps, GB."""
+    return G * N * B * (2 * PL + 3 * n * SL + 8 * M) / 1024 ** 3
+
+
+def tcv_td_gb(G: int, N: int, B: int, PL: int, n: int, SL: int, M: int,
+              C: int, S: int) -> float:
+    """Eq. (4): per-warehouse volume under the transfer dock, GB."""
+    return G * N * B * (2 * PL + 3 * n * SL + 8 * (C + 1) * M) / S / 1024 ** 3
+
+
+def dispatch_time_s(volume_gb: float, bw_bytes_per_s: float) -> float:
+    return volume_gb * 1024 ** 3 / bw_bytes_per_s

@@ -1,0 +1,78 @@
+"""RL worker states over the model zoo.
+
+Workers mirror the paper's graph (Fig. 1): the ACTOR switches between
+generation / inference / update states; REFERENCE and REWARD are
+inference-only.  Each worker state is bound to a cluster node (for the
+transfer-dock ledger) and exchanges samples exclusively through the dock.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RLConfig
+from repro.core.grpo import token_logprobs
+from repro.core.rollout import RolloutEngine
+from repro.models.model import build_model
+
+
+class ActorWorker:
+    """Owns the policy weights; generation/inference/update states."""
+
+    def __init__(self, cfg: ModelConfig, rl: RLConfig, *, eos_id: int,
+                 pad_id: int, node: int = 0):
+        self.cfg = cfg
+        self.rl = rl
+        self.node = node
+        self.model = build_model(cfg)
+        self.engine = RolloutEngine(
+            cfg, max_new=rl.max_response_len, eos_id=eos_id, pad_id=pad_id,
+            temperature=rl.temperature)
+        self._infer = jax.jit(self._infer_impl)
+
+    def _infer_impl(self, params, batch):
+        logits, _ = self.model.forward(params, self.cfg, batch)
+        return token_logprobs(logits, batch["tokens"])
+
+    # generation state --------------------------------------------------------
+    def generate(self, gen_params, prompts: np.ndarray, key, extras=None):
+        return self.engine.generate(gen_params, prompts, key, extras)
+
+    # inference state ---------------------------------------------------------
+    def old_logprobs(self, params, tokens: np.ndarray, extras=None):
+        batch = {"tokens": jnp.asarray(tokens)}
+        if extras:
+            batch.update(extras)
+        return np.asarray(self._infer(params, batch), np.float32)
+
+
+class ReferenceWorker:
+    def __init__(self, cfg: ModelConfig, ref_params, node: int = 1):
+        self.cfg = cfg
+        self.node = node
+        self.params = ref_params
+        self.model = build_model(cfg)
+        self._infer = jax.jit(self._infer_impl)
+
+    def _infer_impl(self, params, batch):
+        logits, _ = self.model.forward(params, self.cfg, batch)
+        return token_logprobs(logits, batch["tokens"])
+
+    def logprobs(self, tokens: np.ndarray, extras=None):
+        batch = {"tokens": jnp.asarray(tokens)}
+        if extras:
+            batch.update(extras)
+        return np.asarray(self._infer(self.params, batch), np.float32)
+
+
+class RewardWorker:
+    """Rule reward (the paper's experiments use rule reward + DeepScaleR)."""
+
+    def __init__(self, dataset, node: int = 2):
+        self.dataset = dataset
+        self.node = node
+
+    def score(self, metas, tokens: np.ndarray, prompt_len: int) -> np.ndarray:
+        responses = tokens[:, prompt_len:]
+        return self.dataset.score(metas, responses)

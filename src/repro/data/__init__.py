@@ -1,0 +1,2 @@
+from repro.data.tokenizer import ByteTokenizer  # noqa: F401
+from repro.data.prompts import PromptDataset, arithmetic_task, pattern_task  # noqa: F401

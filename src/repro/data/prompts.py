@@ -1,0 +1,87 @@
+"""Prompt datasets for RL training.
+
+The paper uses DeepScaleR (math prompts) with a rule reward.  Offline, we
+ship two synthetic rule-reward tasks of the same *shape* (prompt in, response
+scored by a deterministic rule):
+
+  * ``pattern_task``    — prompt names a target byte; reward = fraction of
+    response tokens equal to it.  Learnable by a tiny model in ~100 steps.
+  * ``arithmetic_task`` — prompt is "a+b="; reward 1 if the decoded response
+    starts with the correct sum (sparse; harder).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.tokenizer import ByteTokenizer
+
+
+@dataclasses.dataclass
+class RuleTask:
+    name: str
+    make_prompt: callable          # rng -> (text, meta)
+    reward_fn: callable            # (meta, response_text, response_ids) -> float
+
+
+def pattern_task() -> RuleTask:
+    letters = "abcdefgh"
+
+    def make_prompt(rng: np.random.Generator):
+        c = letters[rng.integers(len(letters))]
+        return f"repeat {c}:", {"target": ord(c)}
+
+    def reward(meta, text, ids):
+        ids = [i for i in ids if i < 256]
+        if not ids:
+            return 0.0
+        return float(np.mean([i == meta["target"] for i in ids]))
+
+    return RuleTask("pattern", make_prompt, reward)
+
+
+def arithmetic_task() -> RuleTask:
+    def make_prompt(rng: np.random.Generator):
+        a, b = int(rng.integers(0, 50)), int(rng.integers(0, 50))
+        return f"{a}+{b}=", {"sum": a + b}
+
+    def reward(meta, text, ids):
+        return float(text.strip().startswith(str(meta["sum"])))
+
+    return RuleTask("arithmetic", make_prompt, reward)
+
+
+class PromptDataset:
+    """Infinite sampler of (padded prompt ids, lengths, metas)."""
+
+    def __init__(self, task: RuleTask, tokenizer: ByteTokenizer | None = None,
+                 max_prompt_len: int = 64, seed: int = 0):
+        self.task = task
+        self.tok = tokenizer or ByteTokenizer()
+        self.max_prompt_len = max_prompt_len
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, n: int):
+        texts, metas, idlists = [], [], []
+        for _ in range(n):
+            text, meta = self.task.make_prompt(self.rng)
+            ids = self.tok.encode(text)
+            texts.append(text)
+            metas.append(meta)
+            idlists.append(ids)
+        lengths = np.array([min(len(i), self.max_prompt_len) for i in idlists],
+                           np.int32)
+        batch = self.tok.pad_batch(idlists, self.max_prompt_len)
+        return batch, lengths, metas
+
+    def score(self, metas, response_ids: np.ndarray) -> np.ndarray:
+        """response_ids: (n, T) int32 (may contain pad/eos)."""
+        out = np.zeros(len(metas), np.float32)
+        for i, meta in enumerate(metas):
+            ids = list(response_ids[i])
+            if ByteTokenizer.eos_id in ids:
+                ids = ids[: ids.index(ByteTokenizer.eos_id)]
+            text = self.tok.decode(ids)
+            out[i] = self.task.reward_fn(meta, text, ids)
+        return out

@@ -1,0 +1,27 @@
+"""Byte-level tokenizer (offline stand-in for the DeepScaleR prompt set's
+tokenizer).  Vocab: 256 bytes + specials."""
+from __future__ import annotations
+
+import numpy as np
+
+PAD, BOS, EOS = 256, 257, 258
+VOCAB = 259
+
+
+class ByteTokenizer:
+    pad_id, bos_id, eos_id = PAD, BOS, EOS
+    vocab_size = VOCAB
+
+    def encode(self, text: str, add_bos: bool = True) -> list[int]:
+        ids = list(text.encode("utf-8"))
+        return ([BOS] if add_bos else []) + ids
+
+    def decode(self, ids) -> str:
+        return bytes(i for i in ids if i < 256).decode("utf-8", errors="replace")
+
+    def pad_batch(self, seqs, length: int) -> np.ndarray:
+        out = np.full((len(seqs), length), PAD, np.int32)
+        for i, s in enumerate(seqs):
+            s = s[:length]
+            out[i, :len(s)] = s
+        return out

@@ -1,0 +1,87 @@
+"""Grouped matmul (GMM) Pallas TPU kernel — the MoE expert-FFN hot spot.
+
+x (T, d) holds tokens sorted by expert with every group boundary aligned to
+``tile_t`` (the caller pads each group); w (E, d, f).  The expert id of each
+row tile is data-dependent, so it is passed through scalar prefetch
+(PrefetchScalarGridSpec) and consumed by the weight BlockSpec index_map —
+exactly the megablocks-on-TPU adaptation: contiguous MXU tiles instead of
+GPU gather-scatter.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(tile_gid_ref, x_ref, w_ref, o_ref):
+    del tile_gid_ref  # consumed by the index_map
+    x = x_ref[...].astype(jnp.float32)          # (tile_t, d)
+    w = w_ref[0].astype(jnp.float32)            # (d, block_f)
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t", "block_f", "interpret"))
+def gmm(x: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray, *,
+        tile_t: int = 128, block_f: int = 512,
+        interpret: bool = False) -> jnp.ndarray:
+    """x: (T, d) group-sorted, tile-aligned; w: (E, d, f); group_sizes: (E,)."""
+    t, d = x.shape
+    e, _, f = w.shape
+    assert t % tile_t == 0, (t, tile_t)
+    block_f = min(block_f, f)
+    while f % block_f:
+        block_f //= 2
+    block_f = max(block_f, 1)
+    nt = t // tile_t
+
+    # expert id per row tile, from the (traced) group sizes
+    offsets = jnp.cumsum(group_sizes)                      # (E,)
+    tile_start = jnp.arange(nt, dtype=jnp.int32) * tile_t
+    tile_gid = jnp.clip(
+        jnp.searchsorted(offsets, tile_start, side="right"), 0, e - 1
+    ).astype(jnp.int32)  # trailing padding tiles compute with the last
+    # expert's weights; their rows are never read back
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nt, f // block_f),
+        in_specs=[
+            pl.BlockSpec((tile_t, d), lambda i, j, gid: (i, 0)),
+            pl.BlockSpec((1, d, block_f), lambda i, j, gid: (gid[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, block_f), lambda i, j, gid: (i, j)),
+    )
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, f), x.dtype),
+        interpret=interpret,
+    )(tile_gid, x, w)
+
+
+def pad_groups(x: jnp.ndarray, gid: jnp.ndarray, num_groups: int,
+               tile_t: int = 128):
+    """Helper: sort rows of ``x`` by group id and pad every group to a
+    ``tile_t`` multiple.  Returns (x_sorted_padded, padded_group_sizes,
+    inverse_gather_idx, valid_mask) so callers can un-permute the output."""
+    t = x.shape[0]
+    order = jnp.argsort(gid, stable=True)
+    sizes = jnp.bincount(gid, length=num_groups)
+    padded = ((sizes + tile_t - 1) // tile_t) * tile_t
+    pad_total = int(num_groups * tile_t)  # worst-case extra rows (static)
+    out_rows = t + pad_total
+    starts = jnp.concatenate([jnp.zeros((1,), sizes.dtype),
+                              jnp.cumsum(padded)[:-1]])
+    # destination row of each (sorted) source row
+    src_group = jnp.sort(gid, stable=True)
+    within = jnp.arange(t) - jnp.take(jnp.concatenate(
+        [jnp.zeros((1,), sizes.dtype), jnp.cumsum(sizes)[:-1]]), src_group)
+    dest = jnp.take(starts, src_group) + within
+    xs = jnp.zeros((out_rows, x.shape[1]), x.dtype).at[dest].set(x[order])
+    return xs, padded, order, dest

@@ -1,0 +1,387 @@
+"""Public fused-op API.
+
+Models call these; the implementation dispatches to a Pallas TPU kernel when
+running on TPU (or when REPRO_PALLAS=interpret forces interpret-mode), and to
+a jnp implementation otherwise.  The jnp attention path is NOT the naive
+oracle: it is a chunked online-softmax implementation with a custom VJP
+(flash semantics), so the compiled HLO of the CPU dry-run has the same
+asymptotic memory behaviour the TPU kernel has — the roofline analysis stays
+honest.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+_FORCE_INTERPRET = os.environ.get("REPRO_PALLAS", "") == "interpret"
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu" or _FORCE_INTERPRET
+
+
+# ---------------------------------------------------------------------------
+# elementwise fusions
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    if _use_pallas() and x.ndim >= 2:
+        from repro.kernels import rmsnorm as _k
+
+        shape = x.shape
+        out = _k.rmsnorm(x.reshape(-1, shape[-1]), w, eps=eps,
+                         interpret=not jax.default_backend() == "tpu")
+        return out.reshape(shape)
+    return ref.rmsnorm(x, w, eps)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    if _use_pallas() and gate.ndim >= 2:
+        from repro.kernels import swiglu as _k
+
+        shape = gate.shape
+        out = _k.swiglu(gate.reshape(-1, shape[-1]), up.reshape(-1, shape[-1]),
+                        interpret=not jax.default_backend() == "tpu")
+        return out.reshape(shape)
+    return ref.swiglu(gate, up)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d), cos/sin broadcastable (..., d//2)."""
+    if _use_pallas() and x.ndim == 4:
+        from repro.kernels import rope as _k
+
+        c, s = cos, sin
+        if c.ndim == 4:            # callers pass a broadcast head axis
+            c, s = c[:, :, 0], s[:, :, 0]
+        return _k.apply_rope(x, c, s,
+                             interpret=not jax.default_backend() == "tpu")
+    return ref.rope(x, cos, sin)
+
+
+def rope_tables(positions: jnp.ndarray, head_dim: int, theta: float):
+    """cos/sin tables for rotate-half RoPE.  positions: (...,) int32.
+
+    Returns cos, sin of shape positions.shape + (head_dim//2,).
+    """
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_tables(positions: jnp.ndarray, head_dim: int, theta: float,
+                 sections: tuple):
+    """M-RoPE (qwen2-vl): positions (3, ...) for (t, h, w); the half-dim is
+    split into ``sections`` (summing to head_dim//2), each section rotated by
+    its own position stream."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (3, ..., half)
+    idx = np.concatenate(
+        [np.full((s,), i) for i, s in enumerate(sections)]
+    )  # (half,) which position stream each channel uses
+    onehot = jax.nn.one_hot(jnp.asarray(idx), 3, dtype=jnp.float32)  # (half, 3)
+    ang = jnp.einsum("s...h,hs->...h", ang, onehot)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# ---------------------------------------------------------------------------
+# attention — flash semantics
+# ---------------------------------------------------------------------------
+
+_DEF_BLOCK = int(os.environ.get("REPRO_ATTN_BLOCK", "512"))
+# jnp-path flash block size trade-off: the (acc, m, l) carry is re-read and
+# re-written every kv block, so HBM carry traffic ∝ nb = Sk/block, while the
+# per-block score tile traffic is ~constant in nb.  Larger blocks cut carry
+# traffic linearly until the score tile dominates (§Perf log).  The Pallas
+# TPU kernel keeps the carry in VMEM and has no such trade-off.
+
+
+def _pick_block(s: int, target: int = 0) -> int:
+    target = target or _DEF_BLOCK
+    if s <= target:
+        return s
+    b = target
+    while s % b:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, causal: bool, window: int, scale: float):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, scale)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, scale):
+    """Chunked online-softmax forward.  q:(B,Sq,H,d) k,v:(B,Sk,KV,d)."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    blk = _pick_block(sk)
+    nb = sk // blk
+    qg = (q.reshape(b, sq, kv, g, d) * scale).astype(jnp.float32)
+    q_pos = jnp.arange(sq) + (sk - sq)
+
+    kb = k.reshape(b, nb, blk, kv, d).swapaxes(0, 1).astype(jnp.float32)
+    vb = v.reshape(b, nb, blk, kv, d).swapaxes(0, 1).astype(jnp.float32)
+
+    def step(carry, xs):
+        acc, m, l = carry
+        kblk, vblk, i = xs
+        k_pos = i * blk + jnp.arange(blk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk)
+        mask = jnp.ones((sq, blk), dtype=bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, vblk)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kv, g, sq, d), jnp.float32)
+    m0 = jnp.full((b, kv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (kb, vb, jnp.arange(nb))
+    )
+    out = (acc / l[..., None]).transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+    lse = (m + jnp.log(l))  # (B, KV, G, Sq)
+    return out.astype(q.dtype), lse
+
+
+def _flash_fwd(q, k, v, causal, window, scale):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, scale)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, scale, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    blk = _pick_block(sk)
+    nb = sk // blk
+    qg = q.reshape(b, sq, kv, g, d).astype(jnp.float32)
+    dog = dout.reshape(b, sq, kv, g, d).astype(jnp.float32)
+    og = out.reshape(b, sq, kv, g, d).astype(jnp.float32)
+    delta = jnp.sum(dog * og, axis=-1).transpose(0, 2, 3, 1)  # (B,KV,G,Sq)
+    q_pos = jnp.arange(sq) + (sk - sq)
+    kb = k.reshape(b, nb, blk, kv, d).swapaxes(0, 1).astype(jnp.float32)
+    vb = v.reshape(b, nb, blk, kv, d).swapaxes(0, 1).astype(jnp.float32)
+
+    def step(dq, xs):
+        kblk, vblk, i = xs
+        k_pos = i * blk + jnp.arange(blk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk) * scale
+        mask = jnp.ones((sq, blk), dtype=bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        p = jnp.where(mask[None, None, None], jnp.exp(s - lse[..., None]), 0.0)
+        dp = jnp.einsum("bqkgd,bskd->bkgqs", dog, vblk)
+        ds = p * (dp - delta[..., None]) * scale
+        dv_blk = jnp.einsum("bkgqs,bqkgd->bskd", p, dog)
+        dk_blk = jnp.einsum("bkgqs,bqkgd->bskd", ds, qg)
+        dq = dq + jnp.einsum("bkgqs,bskd->bqkgd", ds, kblk)
+        return dq, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, sq, kv, g, d), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(step, dq0, (kb, vb, jnp.arange(nb)))
+    dk = dk_b.swapaxes(0, 1).reshape(b, sk, kv, d).astype(k.dtype)
+    dv = dv_b.swapaxes(0, 1).reshape(b, sk, kv, d).astype(v.dtype)
+    return dq.reshape(b, sq, h, d).astype(q.dtype), dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _attention_batch_spec(b: int, h: int, sq: int = 0):
+    """When the head count cannot divide the "model" axis, GQA attention
+    cannot be head-sharded — XLA then contraction-shards the score einsums
+    and all-reduces score-sized tensors every block (measured 16.5 TB/device
+    on llama4 train_4k — §Perf log).  Two escapes, in preference order:
+
+    1. batch divides the WHOLE mesh -> shard attention purely over batch
+       (fully local, collectives only at entry/exit);
+    2. otherwise, Ulysses-style sequence parallelism for prefill: shard the
+       q SEQUENCE over "model" (k/v stay model-replicated, which for GQA is
+       cheap) — per-device score compute drops by the model-axis size.
+
+    Returns (q_spec, kv_spec) or None."""
+    from jax.sharding import PartitionSpec as P
+
+    mesh = ambient_mesh()
+    if mesh is None:
+        return None
+    names = list(mesh.axis_names)
+    sizes = (dict(zip(names, mesh.axis_sizes)) if hasattr(mesh, "axis_sizes")
+             else {a: mesh.shape[a] for a in names})
+    mdl = sizes.get("model", 1)
+    if mdl <= 1 or h % mdl == 0:
+        return None                       # head sharding works; leave to XLA
+    axes = tuple(a for a in ("pod", "data", "model") if a in sizes)
+    total = 1
+    for a in axes:
+        total *= sizes[a]
+    if total > 1 and b % total == 0:
+        spec = P(axes, None, None, None)
+        return spec, spec
+    dp = tuple(a for a in ("pod", "data") if a in sizes)
+    ndp = 1
+    for a in dp:
+        ndp *= sizes[a]
+    bax = (dp if len(dp) > 1 else dp[0]) if ndp > 1 and b % ndp == 0 else None
+    if sq > 1 and sq % mdl == 0:
+        return (P(bax, "model", None, None), P(bax, None, None, None))
+    return None
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              scale: float | None = None) -> jnp.ndarray:
+    """GQA attention with flash semantics (chunked, O(S) memory, recompute
+    backward).  q: (B,Sq,H,d); k,v: (B,Sk,KV,d)."""
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(q.shape[-1]))
+    spec = _attention_batch_spec(q.shape[0], q.shape[2], q.shape[1])
+    if spec is not None:
+        qs, kvs = spec
+        q = _maybe_constrain(q, qs)
+        k = _maybe_constrain(k, kvs)
+        v = _maybe_constrain(v, kvs)
+    if _use_pallas():
+        from repro.kernels import flash_attention as _k
+
+        out = _k.flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            interpret=not jax.default_backend() == "tpu")
+    else:
+        out = _flash(q, k, v, causal, window, scale)
+    if spec is not None:
+        # re-anchor: the Ulysses q-sequence sharding must NOT leak past the
+        # attention — downstream MoE layers need the "model" axis for EP
+        # (leaked S-sharding measured: full-expert f32 all-gathers on llama4
+        # multi-pod prefill — §Perf log)
+        out = _maybe_constrain(out, spec[1])
+    return out
+
+
+def ambient_mesh():
+    """The mesh active at trace time: the new-style abstract mesh, or the
+    legacy ``with mesh:`` thread-resources mesh.  None when single-device."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    except Exception:
+        pass
+    try:
+        from jax._src import mesh as mesh_lib
+
+        pm = mesh_lib.thread_resources.env.physical_mesh
+        if pm is not None and pm.axis_names:
+            return pm
+    except Exception:
+        pass
+    return None
+
+
+def _maybe_constrain(x, spec):
+    """with_sharding_constraint when an ambient mesh provides the axes;
+    no-op otherwise (single-device tests / examples)."""
+    mesh = ambient_mesh()
+    if mesh is None:
+        return x
+    flat = []
+    for ax in spec:
+        flat.extend(ax if isinstance(ax, tuple) else [ax])
+    if any(ax is not None and ax not in mesh.axis_names for ax in flat):
+        return x
+    try:
+        from jax.sharding import AbstractMesh, NamedSharding
+
+        if isinstance(mesh, AbstractMesh):
+            return jax.lax.with_sharding_constraint(x, spec)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except Exception:
+        return x
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask, *,
+                     scale: float | None = None) -> jnp.ndarray:
+    """One-token attention against a (possibly ring-buffered) KV cache.
+
+    q: (B, 1, H, d); k_cache/v_cache: (B, S, KV, d);
+    valid_mask: (B, S) bool — True for live cache slots.
+    Memory-bound; a plain einsum is roofline-optimal here.
+
+    Sharding: when KV heads cannot divide the "model" axis the cache is
+    head_dim-sharded (see sharding/rules.py); we pin q to the same layout so
+    the contraction is local and only the (tiny) score partial-sums are
+    all-reduced — instead of XLA re-gathering the whole cache per step.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    b, _, h, d = q.shape
+    _, s, kv, _ = k_cache.shape
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    # keep the cache in its storage dtype (bf16) and accumulate in f32 via
+    # preferred_element_type — upcasting the cache would materialize (and,
+    # under SPMD, re-gather) a full-precision copy of the whole cache.
+    qg = (q.reshape(b, kv, g, d) * scale).astype(k_cache.dtype)
+    mesh = ambient_mesh()
+    mdl = dict(zip(mesh.axis_names,
+                   getattr(mesh, "axis_sizes", None)
+                   or [mesh.shape[a] for a in mesh.axis_names])
+               ).get("model", 1) if mesh is not None else 1
+    if mdl > 1 and kv % mdl and d % mdl == 0:
+        # hd-sharded-cache regime (see sharding/rules.py)
+        qg = _maybe_constrain(qg, P(None, None, None, "model"))
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                    preferred_element_type=jnp.float32)
+    sc = jnp.where(valid_mask[:, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul (MoE)
+# ---------------------------------------------------------------------------
+
+def gmm(x: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray,
+        tile_t: int = 128) -> jnp.ndarray:
+    """Grouped matmul: x (T,d) sorted by group, w (E,d,f), group_sizes (E,).
+
+    TPU path: Pallas kernel with MXU-aligned tiles (caller must align group
+    boundaries to ``tile_t``).  CPU path: one-hot einsum (dense over E — used
+    only at smoke scale).
+    """
+    if _use_pallas():
+        from repro.kernels import gmm as _k
+
+        return _k.gmm(x, w, group_sizes, tile_t=tile_t,
+                      interpret=not jax.default_backend() == "tpu")
+    t = x.shape[0]
+    e = w.shape[0]
+    bounds = jnp.cumsum(group_sizes)
+    gid = jnp.sum(jnp.arange(t)[:, None] >= bounds[None, :], axis=-1)
+    onehot = jax.nn.one_hot(gid, e, dtype=x.dtype)  # (T, E)
+    xe = jnp.einsum("td,te->etd", x, onehot)
+    ye = jnp.einsum("etd,edf->etf", xe, w.astype(x.dtype))
+    return jnp.einsum("etf,te->tf", ye, onehot)

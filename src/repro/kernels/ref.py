@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernel tests assert against, and the CPU
+execution path used when the TPU backend is absent (this container).  They are
+written for clarity, not speed.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm over the last dim.  x: (..., d), w: (d,).
+
+    f32 is used ONLY for the variance reduction; the scale is applied in the
+    storage dtype so no (B,S,d)-sized f32 buffer is materialized (the fused
+    TPU kernel does the same in VMEM — §Perf log, qwen1.5-110b)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = (jax_rsqrt(var + eps)).astype(x.dtype)
+    return x * inv * w.astype(x.dtype)
+
+
+def jax_rsqrt(x):
+    return 1.0 / jnp.sqrt(x)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    """Fused SwiGLU activation: silu(gate) * up."""
+    g32 = gate.astype(jnp.float32)
+    return (g32 * (1.0 / (1.0 + jnp.exp(-g32))) * up.astype(jnp.float32)).astype(
+        gate.dtype
+    )
+
+
+def rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate-half RoPE application.
+
+    x:   (..., d)  with the first/second half-split convention (llama).
+    cos: (..., d//2) broadcastable against x's leading dims.
+    sin: (..., d//2)
+    """
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos.astype(jnp.float32)
+    s = sin.astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Naive GQA attention oracle.
+
+    q: (B, Sq, H, d);  k, v: (B, Sk, KV, d) with H % KV == 0.
+    ``window`` > 0 masks keys older than ``window`` positions (sliding window).
+    Assumes q positions are the LAST Sq positions of the Sk context
+    (Sq == Sk for self-attention; Sq == 1 for decode).
+    """
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    group = h // kv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, sq, kv, group, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf) * scale
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def gmm(
+    x: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray
+) -> jnp.ndarray:
+    """Grouped matmul oracle (MoE expert FFN building block).
+
+    x: (T, d) rows sorted by group;  w: (E, d, f);  group_sizes: (E,) int32,
+    sum(group_sizes) == T.  Row t is multiplied by w[g(t)].
+    """
+    t = x.shape[0]
+    e = w.shape[0]
+    # group id per row from cumulative sizes
+    bounds = jnp.cumsum(group_sizes)
+    row = jnp.arange(t)
+    gid = jnp.sum(row[:, None] >= bounds[None, :], axis=-1)  # (T,)
+    wg = w[gid]  # (T, d, f) — oracle only; the kernel never materializes this
+    return jnp.einsum(
+        "td,tdf->tf", x.astype(jnp.float32), wg.astype(jnp.float32)
+    ).astype(x.dtype)

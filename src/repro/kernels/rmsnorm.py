@@ -1,0 +1,43 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+Tiles rows into VMEM blocks of (block_rows, d); each program computes the
+mean-square and scales in one pass (one HBM read, one HBM write — the fusion
+the paper's Ascend kernel provides).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, *, eps: float = 1e-5,
+            block_rows: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """x: (rows, d), w: (d,).  d should be a multiple of 128 on real TPU."""
+    rows, d = x.shape
+    block_rows = min(block_rows, rows)
+    while rows % block_rows:
+        block_rows //= 2
+    block_rows = max(block_rows, 1)
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,50 @@
+"""Fused rotate-half RoPE application Pallas TPU kernel.
+
+x: (B, S, H, d) with cos/sin (B, S, d//2); the rotation is applied in one
+VMEM pass per (batch, seq-block) tile across all heads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (1, bs, H, d)
+    c = cos_ref[...].astype(jnp.float32)        # (1, bs, d//2)
+    s = sin_ref[...].astype(jnp.float32)
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = c[:, :, None, :]                        # broadcast over heads
+    s = s[:, :, None, :]
+    o = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray, *,
+               block_s: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """x: (B, S, H, d); cos/sin: (B, S, d//2) (or broadcastable (1, S, d//2))."""
+    b, s, h, d = x.shape
+    cos = jnp.broadcast_to(cos, (b, s, d // 2))
+    sin = jnp.broadcast_to(sin, (b, s, d // 2))
+    block_s = min(block_s, s)
+    while s % block_s:
+        block_s //= 2
+    block_s = max(block_s, 1)
+    grid = (b, s // block_s)
+    return pl.pallas_call(
+        _rope_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, h, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_s, d // 2), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_s, d // 2), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, h, d), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, d), x.dtype),
+        interpret=interpret,
+    )(x, cos, sin)

@@ -1,0 +1,297 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+All quantities from ``compiled.cost_analysis()`` / the post-SPMD HLO are
+PER DEVICE (verified empirically: flops of a sharded matmul ≈ global/chips).
+Terms (seconds, per chip — TPU v5e targets):
+
+    compute    = HLO_flops_per_device / peak_flops
+    memory     = HLO_bytes_per_device / hbm_bw
+    collective = modeled_ring_bytes_per_device / ici_bw
+
+collective bytes are parsed from the HLO text: for each
+all-gather/all-reduce/reduce-scatter/all-to-all/collective-permute op we take
+the result buffer size and model ring traffic over its replica group.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.configs.base import TPU_V5E, HardwareConfig, ModelConfig
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?(\w+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_TUPLE_COLL_RE = re.compile(
+    r"=\s+\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _buffer_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _ring_factor(kind: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if kind == "all-gather":
+        return (g - 1) / g            # result is the full gathered buffer
+    if kind == "reduce-scatter":
+        return float(g - 1)           # result is the small shard
+    if kind == "all-to-all":
+        return (g - 1) / g
+    return 1.0                        # collective-permute
+
+
+@dataclass
+class CollectiveStats:
+    ops: list = field(default_factory=list)   # (kind, result_bytes, gsize)
+
+    @property
+    def modeled_bytes(self) -> float:
+        return sum(b * _ring_factor(k, g) for k, b, g in self.ops)
+
+    @property
+    def raw_result_bytes(self) -> float:
+        return sum(b for _, b, _ in self.ops)
+
+    def by_kind(self) -> dict:
+        out = {}
+        for k, b, g in self.ops:
+            d = out.setdefault(k, {"count": 0, "modeled_bytes": 0.0})
+            d["count"] += 1
+            d["modeled_bytes"] += b * _ring_factor(k, g)
+        return out
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        buf = None
+        kind = None
+        if m:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            buf = _buffer_bytes(dtype, dims)
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                buf = sum(_buffer_bytes(d, s)
+                          for d, s in _SHAPE_RE.findall(mt.group(1)))
+                if kind == "all-gather" or kind == "all-reduce":
+                    buf //= 2  # start-op tuples carry (operand, result)
+        if buf is None:
+            continue
+        gm = _GROUPS_RE.search(line)
+        gsize = int(gm.group(2)) if gm else 1
+        stats.ops.append((kind, buf, gsize))
+    return stats
+
+
+def model_flops(cfg: ModelConfig, tokens: int) -> float:
+    """6·N_active·D — the 'useful' FLOPs for D processed tokens."""
+    return 6.0 * active_params(cfg) * tokens
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Parameter count on the active path (MoE counts top-k experts)."""
+    d, v, L = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    n = 2 * v * d                      # embed + lm_head
+    if cfg.arch_type == "ssm":
+        di, g, ds, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+        per = 2 * d * di + 2 * d * g * ds + d * h + di * d
+        return n + L * per
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+    if cfg.mlp_type == "swiglu":
+        mlp = 3 * d * cfg.d_ff
+    else:
+        mlp = 2 * d * cfg.d_ff
+    if cfg.is_moe:
+        mlp = mlp * cfg.experts_per_token + d * cfg.num_experts
+    if cfg.arch_type == "hybrid":
+        di, g, ds, hh = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+        per = 2 * d * di + 2 * d * g * ds + d * hh + di * d
+        n_sites = L // cfg.hybrid_attn_period
+        # shared block weights are ONE set, but compute runs n_sites times —
+        # for the 6·N·D FLOPs estimate we count compute-equivalents.
+        return n + L * per + n_sites * (attn + mlp)
+    if cfg.arch_type == "audio":
+        enc = cfg.encoder_layers * (attn + mlp)
+        dec = L * (2 * attn + mlp)     # self + cross attention
+        return n + enc + dec
+    return n + L * (attn + mlp)
+
+
+def total_params(cfg: ModelConfig) -> float:
+    """All parameters (MoE counts every expert)."""
+    if not cfg.is_moe:
+        return active_params(cfg)
+    d, L = cfg.d_model, cfg.num_layers
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+    mlp = 3 * d * cfg.d_ff * cfg.num_experts + d * cfg.num_experts
+    return 2 * cfg.vocab_size * d + L * (attn + mlp)
+
+
+def analytic_bytes(cfg: ModelConfig, kind: str, global_batch: int,
+                   seq_len: int, chips: int, capacity: int = 0) -> float:
+    """Kernel-ideal per-device HBM bytes (what the TPU Pallas kernels would
+    pay, vs. the CPU-path HLO whose chunked-attention loop carries spill to
+    HBM).  Coarse napkin model, clearly labeled in the tables."""
+    p_total = total_params(cfg)
+    p_loc = p_total / chips * 2                       # bf16 weights shard
+    b_loc = max(global_batch / chips, 1e-9)
+    d = cfg.d_model
+    if kind == "train":
+        w = 3 * p_loc                                 # fwd + remat + bwd reads
+        g = p_loc                                     # grad write (bf16)
+        opt = p_total / chips * 4 * 4                 # m,v fp32 read+write
+        act = cfg.num_layers * b_loc * seq_len * d * 2 * 6
+        logits = 3 * b_loc * seq_len * cfg.vocab_size / max(chips ** 0.5, 1) * 4
+        return w + g + opt + act + logits
+    if kind == "prefill":
+        act = cfg.num_layers * b_loc * seq_len * d * 2 * 3
+        return p_loc + act
+    # decode: read active weights once + cache once
+    act_p = active_params(cfg) / chips * 2
+    cache = 0.0
+    if not cfg.is_attention_free:
+        kvb = (cfg.num_layers * b_loc * (capacity or seq_len)
+               * cfg.num_kv_heads * cfg.head_dim * 2 * 2)
+        cache += kvb
+    if cfg.arch_type in ("ssm", "hybrid"):
+        cache += (cfg.num_layers * b_loc * cfg.ssm_nheads * cfg.ssm_head_dim
+                  * cfg.ssm_state * 4 * 2)
+    return act_p + cache
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    bytes_ideal: float
+    collective_bytes: float
+    tokens: int
+    cfg: ModelConfig
+    hw: HardwareConfig = TPU_V5E
+    memory_stats: dict = field(default_factory=dict)
+    collectives_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / self.hw.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / self.hw.hbm_bw
+
+    @property
+    def memory_ideal_s(self) -> float:
+        """Memory term if the Pallas kernels keep loop carries in VMEM
+        (the TPU-target number; memory_s is the CPU-path HLO count)."""
+        return self.bytes_ideal / self.hw.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / self.hw.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def model_flops_total(self) -> float:
+        return model_flops(self.cfg, self.tokens)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_flops × chips): how much compiled compute is
+        'useful'.  <1 means remat/dispatch overhead; >1 means the compiler
+        under-counts (e.g. fused ops)."""
+        hlo_total = self.flops_per_device * self.chips
+        return self.model_flops_total / max(hlo_total, 1.0)
+
+    def as_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "memory_ideal_s": self.memory_ideal_s,
+            "bytes_ideal": self.bytes_ideal,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops_total": self.model_flops_total,
+            "useful_flops_ratio": self.useful_ratio,
+            "tokens": self.tokens,
+            "memory_stats": self.memory_stats,
+            "collectives_by_kind": self.collectives_by_kind,
+        }
+
+
+def analyze(arch: str, shape_name: str, mesh_name: str, chips: int,
+            cfg: ModelConfig, compiled, tokens: int, *, kind: str = "train",
+            global_batch: int = 0, seq_len: int = 0,
+            capacity: int = 0) -> Roofline:
+    """XLA's cost_analysis counts while bodies ONCE, so scanned-layer
+    programs under-report by ~L×.  The trip-count-aware HLO walk in
+    ``hlo_cost`` is the authoritative source; the raw cost_analysis numbers
+    are kept in memory_stats for reference."""
+    from repro.launch import hlo_cost
+
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    hc = hlo_cost.analyze_hlo(text)
+    mem = compiled.memory_analysis()
+    mem_stats = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        "xla_cost_flops": float(ca.get("flops", 0.0)),
+        "xla_cost_bytes": float(ca.get("bytes accessed", 0.0)),
+        "num_whiles": hc.num_whiles,
+        "trip_counts": hc.trip_counts,
+    }
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=hc.flops,
+        bytes_per_device=hc.bytes,
+        bytes_ideal=analytic_bytes(cfg, kind, global_batch, seq_len, chips,
+                                   capacity),
+        collective_bytes=hc.collective_bytes,
+        tokens=tokens, cfg=cfg,
+        memory_stats=mem_stats,
+        collectives_by_kind=hc.collectives_by_kind,
+    )

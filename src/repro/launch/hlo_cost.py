@@ -1,0 +1,237 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+scan-over-layers program under-reports FLOPs/bytes/collectives by ~L×.  This
+module walks the post-SPMD HLO text, propagates multipliers through the call
+graph (while bodies × known_trip_count, fusions × 1) and accumulates:
+
+  * flops            — 2 · prod(result) · contraction for every dot
+  * bytes            — result + operand buffer sizes of every non-fused,
+                       non-view instruction (the HBM traffic model: every HLO
+                       buffer is written once and read per use)
+  * collectives      — modeled ring bytes per device for all-gather /
+                       all-reduce / reduce-scatter / all-to-all /
+                       collective-permute
+
+All values are PER DEVICE (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s+\(.*\)\s+->\s+.*\{\s*$")
+_CALLED_RE = re.compile(r"(calls|to_apply|condition|body)=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count["\']?:\s*\{\s*["\']?n["\']?:\s*"?(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_VIEW_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+             "iota", "after-all", "reshape", "copy-start", "copy-done",
+             "partition-id", "replica-id", "rng-bit-generator"}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start", "ragged-all-to-all"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _first_shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _ring_factor(kind: str, g: int) -> float:
+    kind = kind.replace("-start", "")
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if kind == "all-gather":
+        return (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(g - 1)
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return (g - 1) / g
+    return 1.0
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list
+    attrs: str
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives_by_kind: dict = field(default_factory=dict)
+    num_whiles: int = 0
+    trip_counts: list = field(default_factory=list)
+    raw_flops: float = 0.0            # without trip-count multipliers
+
+
+def _matching_paren(s: str, start: int) -> int:
+    """Index just past the paren group opening at ``s[start] == '('``."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _parse_instr(line: str) -> Instr | None:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3:]
+    if rest.startswith("("):              # tuple type (may contain comments)
+        end = _matching_paren(rest, 0)
+        type_str = rest[:end]
+        rest = rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str = rest[:sp]
+        rest = rest[sp + 1:].lstrip()
+    p = rest.find("(")
+    if p < 0:
+        return None
+    opcode = rest[:p].strip()
+    end = _matching_paren(rest, p)
+    op_str = rest[p + 1:end - 1]
+    attrs = rest[end:]
+    return Instr(name, type_str, opcode, _OPERAND_RE.findall(op_str), attrs)
+
+
+def parse_module(text: str):
+    """Returns (computations: name -> [Instr], entry_name, shape_table)."""
+    comps, cur, entry = {}, None, None
+    shape_table = {}
+    for line in text.splitlines():
+        stripped = line.strip()
+        m = _COMP_RE.match(stripped) if "{" in line else None
+        if m and ("->" in line):
+            cur = comps.setdefault(m.group(1), [])
+            if stripped.startswith("ENTRY"):
+                entry = m.group(1)
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        inst = _parse_instr(line)
+        if inst is None:
+            continue
+        cur.append(inst)
+        shape_table[inst.name] = inst.type_str
+    return comps, entry, shape_table
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry, shapes = parse_module(text)
+    cost = HloCost()
+    if entry is None:
+        return cost
+
+    # computations reached through fusions/reductions: flops yes, bytes no
+    work = [(entry, 1.0, True)]        # (comp, multiplier, count_bytes)
+    seen_whiles = set()
+    while work:
+        cname, mult, count_bytes = work.pop()
+        for inst in comps.get(cname, ()):  # noqa: B020
+            op = inst.opcode
+            # --- call graph ------------------------------------------------
+            refs = _CALLED_RE.findall(inst.attrs)
+            if op == "while":
+                tm = _TRIP_RE.search(inst.attrs)
+                trip = float(tm.group(1)) if tm else 1.0
+                if inst.name not in seen_whiles:
+                    seen_whiles.add(inst.name)
+                    cost.num_whiles += 1
+                    cost.trip_counts.append(trip)
+                for kind, ref in refs:
+                    work.append((ref, mult * (trip if kind == "body" else trip),
+                                 count_bytes))
+                continue
+            for kind, ref in refs:
+                # fusion interiors don't touch HBM; reduce bodies are tiny
+                work.append((ref, mult, False))
+
+            # --- flops -----------------------------------------------------
+            if op in ("dot", "convolution"):
+                result = 1
+                for d in _first_shape_dims(inst.type_str):
+                    result *= d
+                contract = 1
+                cm = _CONTRACT_RE.search(inst.attrs)
+                if cm and inst.operands:
+                    lhs_dims = _first_shape_dims(
+                        shapes.get(inst.operands[0], ""))
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            contract *= lhs_dims[int(idx)]
+                f = 2.0 * result * contract
+                cost.flops += mult * f
+                cost.raw_flops += f
+
+            # --- collectives ------------------------------------------------
+            if op in _COLLECTIVES:
+                buf = _shape_bytes(inst.type_str)
+                if op.endswith("-start"):
+                    buf //= 2          # start tuples carry (operand, result)
+                gm = _GROUPS_RE.search(inst.attrs)
+                g = int(gm.group(2)) if gm else 1
+                moved = buf * _ring_factor(op, g)
+                cost.collective_bytes += mult * moved
+                k = op.replace("-start", "")
+                d = cost.collectives_by_kind.setdefault(
+                    k, {"count": 0.0, "modeled_bytes": 0.0})
+                d["count"] += mult
+                d["modeled_bytes"] += mult * moved
+
+            # --- bytes -----------------------------------------------------
+            if count_bytes and op not in _VIEW_OPS:
+                b = _shape_bytes(inst.type_str)
+                for o in inst.operands:
+                    b += _shape_bytes(shapes.get(o, ""))
+                cost.bytes += mult * b
+    return cost

@@ -1,0 +1,25 @@
+"""Production meshes.
+
+Single pod:  (16, 16)    over ("data", "model")        — 256 chips.
+Multi-pod:   (2, 16, 16) over ("pod", "data", "model") — 512 chips.
+
+A FUNCTION (not a module constant) so importing this module never touches
+jax device state — only ``dryrun.py`` sets the 512-host-device XLA flag.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (CPU examples/tests)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,197 @@
+"""ShapeDtypeStruct stand-ins + sharding bundles for every
+(architecture × input shape) program — no device allocation anywhere.
+
+``build_program(arch, shape_name, mesh, ...)`` returns:
+    fn         — the python callable to jit (train_step / prefill / decode)
+    args       — tuple of ShapeDtypeStruct pytrees
+    in_shard   — matching tree of NamedSharding
+    out_shard  — optional
+    meta       — dict (program kind, capacity, notes)
+
+Decode shapes lower ``serve_step`` (ONE token against a seq_len KV cache).
+``long_500k`` requires sub-quadratic attention: SSM/hybrid run natively; the
+full-attention archs run with an 8192 sliding-window ring cache (config
+override recorded in meta); whisper skips it (fixed 1500-frame audio context
+— recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import ModelConfig, RLConfig, ShapeConfig
+from repro.core import grpo
+from repro.models.model import build_model
+from repro.optim import adamw_init
+from repro.sharding import batch_partition, cache_specs, param_specs
+
+LONG_CTX_WINDOW = 8192
+
+
+class SkipPair(Exception):
+    """This (arch, shape) pair is skipped by design (see DESIGN.md)."""
+
+
+def effective_config(arch: str, shape_name: str) -> ModelConfig:
+    cfg = get_config(arch)
+    if shape_name == "long_500k":
+        if cfg.arch_type == "audio":
+            raise SkipPair(
+                "whisper: 500k-token decode context does not exist "
+                "(fixed 1500-frame audio context)")
+        if not cfg.is_attention_free and cfg.hybrid_attn_period == 0:
+            win = cfg.sliding_window or LONG_CTX_WINDOW
+            cfg = cfg.replace(sliding_window=min(win, LONG_CTX_WINDOW))
+    return cfg
+
+
+def decode_capacity(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if cfg.sliding_window and shape.seq_len > cfg.sliding_window:
+        return cfg.sliding_window       # ring buffer
+    return shape.seq_len
+
+
+# ---------------------------------------------------------------------------
+# struct builders (all via eval_shape / ShapeDtypeStruct — zero allocation)
+# ---------------------------------------------------------------------------
+
+def params_structs(cfg: ModelConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(
+        functools.partial(model.init, cfg), jax.random.PRNGKey(0))
+
+
+def opt_structs(params):
+    return jax.eval_shape(adamw_init, params)
+
+
+def _extras_structs(cfg: ModelConfig, b: int) -> dict:
+    out = {}
+    if cfg.arch_type == "vlm":
+        out["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.arch_type == "audio":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def train_batch_structs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "response_mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        "advantages": jax.ShapeDtypeStruct((b,), jnp.float32),
+        "old_logp": jax.ShapeDtypeStruct((b, s - 1), jnp.float32),
+        "ref_logp": jax.ShapeDtypeStruct((b, s - 1), jnp.float32),
+    }
+    batch.update(_extras_structs(cfg, b))
+    return batch
+
+
+def _batch_specs(cfg: ModelConfig, structs: dict, mesh) -> dict:
+    out = {}
+    for k, v in structs.items():
+        bax = batch_partition(mesh, v.shape[0])
+        out[k] = P(bax, *([None] * (v.ndim - 1)))
+    return out
+
+
+def cache_structs(cfg: ModelConfig, b: int, capacity: int):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(cfg, b, capacity))
+
+
+# ---------------------------------------------------------------------------
+# program bundles
+# ---------------------------------------------------------------------------
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_program(arch: str, shape_name: str, mesh, *,
+                  gen_mode: str = "2d", rl: RLConfig | None = None):
+    cfg = effective_config(arch, shape_name)
+    shape = INPUT_SHAPES[shape_name]
+    rl = rl or RLConfig()
+    model = build_model(cfg)
+    pstruct = params_structs(cfg)
+
+    if shape.kind == "train":
+        tspecs = param_specs(cfg, pstruct, mesh, stage="train")
+        ostruct = opt_structs(pstruct)
+        ospecs = opt_structs_specs(tspecs, ostruct)
+        bstruct = train_batch_structs(cfg, shape)
+        bspecs = _batch_specs(cfg, bstruct, mesh)
+        fn = grpo.make_train_step(cfg, rl)
+        args = (pstruct, ostruct, bstruct)
+        in_shard = (_named(mesh, tspecs), _named(mesh, ospecs),
+                    _named(mesh, bspecs))
+        out_shard = (_named(mesh, tspecs), _named(mesh, ospecs), None)
+        meta = {"kind": "train", "cfg": cfg}
+        return fn, args, in_shard, out_shard, meta
+
+    gspecs = param_specs(cfg, pstruct, mesh, stage="gen", gen_mode=gen_mode)
+    if shape.kind == "prefill":
+        b, s = shape.global_batch, shape.seq_len
+        cstruct = cache_structs(cfg, b, s)
+        cspecs = cache_specs(cfg, cstruct, mesh)
+        bstruct = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        bstruct.update(_extras_structs(cfg, b))
+        bspecs = _batch_specs(cfg, bstruct, mesh)
+
+        def prefill_fn(params, batch, cache):
+            return model.prefill(params, cfg, batch, cache)
+
+        args = (pstruct, bstruct, cstruct)
+        in_shard = (_named(mesh, gspecs), _named(mesh, bspecs),
+                    _named(mesh, cspecs))
+        out_shard = (None, _named(mesh, cspecs))
+        meta = {"kind": "prefill", "cfg": cfg}
+        return prefill_fn, args, in_shard, out_shard, meta
+
+    # decode
+    b, s = shape.global_batch, shape.seq_len
+    cap = decode_capacity(cfg, shape)
+    cstruct = cache_structs(cfg, b, cap)
+    cspecs = cache_specs(cfg, cstruct, mesh)
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    bax = batch_partition(mesh, b)
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode(params, cfg, cache, tokens, pos)
+
+    args = (pstruct, cstruct, tok, pos)
+    in_shard = (_named(mesh, gspecs), _named(mesh, cspecs),
+                NamedSharding(mesh, P(bax, None)), NamedSharding(mesh, P()))
+    out_shard = (None, _named(mesh, cspecs))
+    meta = {"kind": "decode", "cfg": cfg, "capacity": cap,
+            "window": cfg.sliding_window}
+    return serve_step, args, in_shard, out_shard, meta
+
+
+def opt_structs_specs(param_specs_tree, ostruct):
+    """AdamW state specs: step replicated, moments shaped like params."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=P(), mu=param_specs_tree, nu=param_specs_tree)
+
+
+def reshard_program(arch: str, mesh, gen_mode: str = "tp"):
+    """The resharding flow as a lowered program: identity jit mapping
+    train-layout weights to generation-layout weights (XLA emits the
+    all-gather schedule — Figure 5 step 1-2 at production scale)."""
+    cfg = get_config(arch)
+    pstruct = params_structs(cfg)
+    tspecs = param_specs(cfg, pstruct, mesh, stage="train")
+    gspecs = param_specs(cfg, pstruct, mesh, stage="gen", gen_mode=gen_mode)
+    fn = lambda p: p
+    return (fn, (pstruct,), (_named(mesh, tspecs),),
+            _named(mesh, gspecs), {"kind": "reshard", "cfg": cfg})

@@ -1,0 +1,99 @@
+"""Training launcher — end-to-end GRPO on a selectable architecture.
+
+CPU-scale entry point (runs for real):
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --iterations 50 --global-batch 8
+
+Production entry point (same code path, production mesh — requires a real
+TPU slice; on this container use ``--dry-run`` which delegates to dryrun.py):
+    python -m repro.launch.train --arch qwen2.5-32b --mesh 16x16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.configs import ALL_ARCHS, get_config, get_smoke_config
+from repro.configs.base import RLConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ALL_ARCHS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--algorithm", default="grpo",
+                    choices=["grpo", "dapo", "ppo"])
+    ap.add_argument("--iterations", type=int, default=20)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--num-generations", type=int, default=4)
+    ap.add_argument("--max-prompt-len", type=int, default=16)
+    ap.add_argument("--max-response-len", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=2e-4)
+    ap.add_argument("--kl-coef", type=float, default=1e-3)
+    ap.add_argument("--num-nodes", type=int, default=4)
+    ap.add_argument("--no-transfer-dock", action="store_true")
+    ap.add_argument("--no-allgather-swap", action="store_true")
+    ap.add_argument("--task", default="pattern",
+                    choices=["pattern", "arithmetic"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-json", default=None)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--resume", default=None,
+                    help="checkpoint path to restore the policy from")
+    args = ap.parse_args()
+
+    # imports deferred so --help never initializes jax
+    from repro.checkpoint import load_pytree, save_pytree
+    from repro.core.trainer import GRPOTrainer
+    from repro.data.prompts import PromptDataset, arithmetic_task, pattern_task
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.replace(dtype="float32", remat=False)
+    rl = RLConfig(
+        algorithm=args.algorithm,
+        num_generations=args.num_generations,
+        max_prompt_len=args.max_prompt_len,
+        max_response_len=args.max_response_len,
+        lr=args.lr, kl_coef=args.kl_coef,
+        use_transfer_dock=not args.no_transfer_dock,
+        use_allgather_swap=not args.no_allgather_swap,
+        num_warehouses=args.num_nodes,
+    )
+    task = pattern_task() if args.task == "pattern" else arithmetic_task()
+    ds = PromptDataset(task, max_prompt_len=rl.max_prompt_len, seed=args.seed)
+    trainer = GRPOTrainer(cfg, rl, ds, num_nodes=args.num_nodes,
+                          seed=args.seed)
+    if args.resume:
+        trainer.params = load_pytree(args.resume, trainer.params)
+        print(f"restored policy from {args.resume}")
+
+    log = []
+    for it in range(args.iterations):
+        t0 = time.perf_counter()
+        st = trainer.iteration(args.global_batch)
+        tput = trainer.throughput(st, args.global_batch)
+        rec = {
+            "iteration": it, "reward": st.reward_mean, "loss": st.loss,
+            "kl": st.kl, "tokens_per_s_per_device": tput,
+            "ete_s": time.perf_counter() - t0,
+            "dispatch_s": st.dispatch["simulated_dispatch_time_s"],
+            "reshard_swap_s": st.reshard.get("modeled_swap_time_s", 0.0),
+        }
+        log.append(rec)
+        print(f"[{it:4d}] reward={st.reward_mean:6.3f} loss={st.loss:8.4f} "
+              f"kl={st.kl:.5f} T={tput:8.1f} tok/s/dev "
+              f"ete={rec['ete_s']:6.2f}s")
+
+    if args.log_json:
+        with open(args.log_json, "w") as f:
+            json.dump(log, f, indent=1)
+    if args.checkpoint:
+        save_pytree(args.checkpoint, trainer.params, step=args.iterations)
+        print(f"saved checkpoint to {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block
+[arXiv:2411.15242].
+
+The shared transformer block (attn + MLP, a single weight set) is applied
+after every ``hybrid_attn_period`` mamba layers.  Structure for scan
+friendliness: the first ``n_groups * period`` mamba layers are scanned as
+(n_groups, period, ...) with the shared block at each group boundary; the
+remaining ``tail`` layers are a plain mamba scan.
+
+The shared block is genuine WEIGHT ALIASING — one pytree leaf reused at
+n_groups sites — which the resharding flow must gather exactly once, while
+its KV cache is per-site (n_groups, B, S, KV, hd).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+def _split(cfg: ModelConfig):
+    period = cfg.hybrid_attn_period
+    n_groups = cfg.num_layers // period
+    tail = cfg.num_layers - n_groups * period
+    return period, n_groups, tail
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 5)
+    return {
+        **L.embed_init(cfg, ks[0]),
+        "mamba": M.block_init(cfg, ks[1], cfg.num_layers),
+        "shared": {
+            "ln1": L.norm_init(cfg, cfg.d_model),
+            "attn": L.attn_init(cfg, ks[2]),
+            "ln2": L.norm_init(cfg, cfg.d_model),
+            "mlp": L.mlp_init(cfg, ks[3]),
+        },
+        "ln_f": L.norm_init(cfg, cfg.d_model),
+    }
+
+
+def _group_params(cfg, mamba):
+    period, n_groups, tail = _split(cfg)
+    ng = n_groups * period
+    grouped = jax.tree.map(
+        lambda v: v[:ng].reshape((n_groups, period) + v.shape[1:]), mamba)
+    tail_p = jax.tree.map(lambda v: v[ng:], mamba)
+    return grouped, tail_p
+
+
+def _shared_train(sp, cfg, h, cos, sin):
+    h = h + L.attn_train(sp["attn"], cfg, L.norm_apply(sp["ln1"], cfg, h),
+                         cos, sin)
+    h = h + L.mlp_apply(sp["mlp"], cfg, L.norm_apply(sp["ln2"], cfg, h))
+    return h
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict):
+    x = L.embed_tokens(params, cfg, batch["tokens"])
+    b, s, _ = x.shape
+    cos, sin = L.rope_for(cfg, jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[None], (b, s)))
+    grouped, tail_p = _group_params(cfg, params["mamba"])
+    shared = params["shared"]
+
+    def inner(h, lp):
+        return M.block_train(lp, cfg, h), None
+
+    def group_body(h, gp):
+        h, _ = jax.lax.scan(inner, h, gp)
+        return _shared_train(shared, cfg, h, cos, sin), None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    x, _ = jax.lax.scan(group_body, x, grouped)
+    if _split(cfg)[2]:
+        tail_body = jax.checkpoint(inner, prevent_cse=False) if cfg.remat else inner
+        x, _ = jax.lax.scan(tail_body, x, tail_p)
+    x = L.norm_apply(params["ln_f"], cfg, x)
+    # logits stay in the compute dtype: an f32 cast here would seed f32
+    # cotangents through the WHOLE backward residual chain (§Perf log).
+    return L.unembed(params, cfg, x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    period, n_groups, tail = _split(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    dt = L.cdtype(cfg)
+    return {
+        "mamba": M.init_cache(cfg, batch, capacity),
+        "attn_k": jnp.zeros((n_groups, batch, capacity, kv, hd), dt),
+        "attn_v": jnp.zeros((n_groups, batch, capacity, kv, hd), dt),
+    }
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
+    x = L.embed_tokens(params, cfg, batch["tokens"])
+    b, s, _ = x.shape
+    cap = cache["attn_k"].shape[2]
+    period, n_groups, tail = _split(cfg)
+    cos, sin = L.rope_for(cfg, jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[None], (b, s)))
+    grouped, tail_p = _group_params(cfg, params["mamba"])
+    shared = params["shared"]
+
+    def inner(h, lp):
+        out, conv, ssm = M.block_prefill(lp, cfg, h)
+        return out, (conv, ssm)
+
+    def group_body(h, gp):
+        h, mcache = jax.lax.scan(inner, h, gp)
+        y, kk, vv = L.attn_prefill(shared["attn"], cfg,
+                                   L.norm_apply(shared["ln1"], cfg, h),
+                                   cos, sin)
+        h = h + y
+        h = h + L.mlp_apply(shared["mlp"], cfg,
+                            L.norm_apply(shared["ln2"], cfg, h))
+        kk = kk[:, -cap:] if s >= cap else jnp.pad(
+            kk, ((0, 0), (0, cap - s), (0, 0), (0, 0)))
+        vv = vv[:, -cap:] if s >= cap else jnp.pad(
+            vv, ((0, 0), (0, cap - s), (0, 0), (0, 0)))
+        return h, (mcache, kk, vv)
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    x, (mcache_g, ks, vs) = jax.lax.scan(group_body, x, grouped)
+    # flatten (n_groups, period, ...) mamba caches back to (L, ...)
+    conv_g, ssm_g = mcache_g
+    merge = lambda v: v.reshape((-1,) + v.shape[2:])
+    conv = jax.tree.map(merge, conv_g)
+    ssm = merge(ssm_g)
+    if tail:
+        tb = jax.checkpoint(inner, prevent_cse=False) if cfg.remat else inner
+        x, (conv_t, ssm_t) = jax.lax.scan(tb, x, tail_p)
+        conv = jax.tree.map(lambda a, t: jnp.concatenate([a, t]), conv, conv_t)
+        ssm = jnp.concatenate([ssm, ssm_t])
+    x = L.norm_apply(params["ln_f"], cfg, x[:, -1:])
+    logits = L.unembed(params, cfg, x)[:, 0].astype(jnp.float32)
+    return logits, {"mamba": {"conv": conv, "ssm": ssm},
+                    "attn_k": ks, "attn_v": vs}
+
+
+def decode(params: dict, cfg: ModelConfig, cache: dict, tokens: jnp.ndarray,
+           pos: jnp.ndarray):
+    x = L.embed_tokens(params, cfg, tokens)
+    b = x.shape[0]
+    cap = cache["attn_k"].shape[2]
+    period, n_groups, tail = _split(cfg)
+    cos, sin = L.rope_for(cfg, jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32)[None, None], (b, 1)))
+    slot = jax.lax.rem(pos, cap)
+    valid = jnp.broadcast_to((jnp.arange(cap) <= pos)[None], (b, cap))
+    grouped, tail_p = _group_params(cfg, params["mamba"])
+    mc = cache["mamba"]
+    ng = n_groups * period
+    take_g = lambda v: v[:ng].reshape((n_groups, period) + v.shape[1:])
+    take_t = lambda v: v[ng:]
+    conv_g = jax.tree.map(take_g, mc["conv"])
+    ssm_g = take_g(mc["ssm"])
+    conv_t = jax.tree.map(take_t, mc["conv"])
+    ssm_t = take_t(mc["ssm"])
+    shared = params["shared"]
+
+    def inner(h, xs):
+        lp, conv, ssm = xs
+        out, conv, ssm = M.block_decode(lp, cfg, h, conv, ssm)
+        return out, (conv, ssm)
+
+    def group_body(h, xs):
+        gp, gconv, gssm, kc, vc = xs
+        h, (nconv, nssm) = jax.lax.scan(inner, h, (gp, gconv, gssm))
+        y, kc, vc = L.attn_decode(shared["attn"], cfg,
+                                  L.norm_apply(shared["ln1"], cfg, h),
+                                  cos, sin, kc, vc, slot, valid)
+        h = h + y
+        h = h + L.mlp_apply(shared["mlp"], cfg,
+                            L.norm_apply(shared["ln2"], cfg, h))
+        return h, (nconv, nssm, kc, vc)
+
+    x, (nconv_g, nssm_g, ks, vs) = jax.lax.scan(
+        group_body, x, (grouped, conv_g, ssm_g, cache["attn_k"],
+                        cache["attn_v"]))
+    merge = lambda v: v.reshape((-1,) + v.shape[2:])
+    conv = jax.tree.map(merge, nconv_g)
+    ssm = merge(nssm_g)
+    if tail:
+        x, (nconv_t, nssm_t) = jax.lax.scan(inner, x, (tail_p, conv_t, ssm_t))
+        conv = jax.tree.map(lambda a, t: jnp.concatenate([a, t]), conv, nconv_t)
+        ssm = jnp.concatenate([ssm, nssm_t])
+    x = L.norm_apply(params["ln_f"], cfg, x)
+    logits = L.unembed(params, cfg, x)[:, 0].astype(jnp.float32)
+    return logits, {"mamba": {"conv": conv, "ssm": ssm},
+                    "attn_k": ks, "attn_v": vs}

@@ -1,0 +1,341 @@
+"""Mamba2 — SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Training/prefill use the chunked SSD algorithm (quadratic within a chunk,
+linear state recurrence across chunks — the TPU-friendly formulation: all
+chunk-local work is MXU einsums, the cross-chunk recurrence is a short
+``lax.scan``).  Decode is the O(1) recurrent update on the SSM state.
+
+Deviation from the CUDA reference (recorded in DESIGN.md): the fused
+``in_proj`` is split into separate z/x/B/C/dt projections so each output
+dimension gets a clean SPMD sharding (heads over the "model" axis) instead of
+slicing a fused sharded dimension.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# block params
+# ---------------------------------------------------------------------------
+
+def block_init(cfg: ModelConfig, key, layers: int) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, ds, h, k = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_conv_kernel
+    ks = jax.random.split(key, 8)
+    dt = L.cdtype(cfg)
+    lead = (layers,)
+    sc = 1 / np.sqrt(d)
+    p = {
+        "ln": {"scale": jnp.ones(lead + (d,), dt)},
+        "wz": L._normal(ks[0], lead + (d, di), sc, dt),
+        "wx": L._normal(ks[1], lead + (d, di), sc, dt),
+        "wB": L._normal(ks[2], lead + (d, g * ds), sc, dt),
+        "wC": L._normal(ks[3], lead + (d, g * ds), sc, dt),
+        "wdt": L._normal(ks[4], lead + (d, h), sc, jnp.float32),
+        "dt_bias": jnp.broadcast_to(
+            jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))), lead + (h,)
+        ),
+        "conv_wx": L._normal(ks[5], lead + (k, di), 1 / np.sqrt(k), dt),
+        "conv_bx": jnp.zeros(lead + (di,), dt),
+        "conv_wB": L._normal(ks[6], lead + (k, g * ds), 1 / np.sqrt(k), dt),
+        "conv_bB": jnp.zeros(lead + (g * ds,), dt),
+        "conv_wC": L._normal(ks[7], lead + (k, g * ds), 1 / np.sqrt(k), dt),
+        "conv_bC": jnp.zeros(lead + (g * ds,), dt),
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)), lead + (h,)),
+        "D": jnp.ones(lead + (h,), jnp.float32),
+        "norm": {"scale": jnp.ones(lead + (di,), dt)},
+        "out_proj": L._normal(
+            jax.random.fold_in(key, 9), lead + (di, d), 1 / np.sqrt(di), dt),
+    }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """x: (B,S,D), w: (k,D), b: (D,) — depthwise causal conv + silu."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    y32 = y.astype(jnp.float32)
+    return (y32 * jax.nn.sigmoid(y32)).astype(x.dtype)
+
+
+def _conv_step(x1: jnp.ndarray, state: jnp.ndarray, w: jnp.ndarray,
+               b: jnp.ndarray):
+    """x1: (B,D); state: (B,k-1,D) last inputs.  Returns (y1, new_state)."""
+    full = jnp.concatenate([state, x1[:, None]], axis=1)       # (B,k,D)
+    y = jnp.einsum("bkd,kd->bd", full, w) + b
+    y32 = y.astype(jnp.float32)
+    return (y32 * jax.nn.sigmoid(y32)).astype(x1.dtype), full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., q) -> lower-triangular pairwise segment sums (..., q, q)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_scan(x, a, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD.
+
+    x:  (B, S, H, P)  — dt already folded in (x * dt)
+    a:  (B, S, H)     — log-decay per step (A * dt, negative)
+    Bm: (B, S, G, N); Cm: (B, S, G, N) with H % G == 0.
+    Returns y (B, S, H, P) and final state (B, H, P, N).
+    """
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    c = s // q
+    hg = h // g
+
+    xg = x.reshape(b, c, q, g, hg, p).astype(jnp.float32)       # (b,c,q,g,H,p)
+    ag = a.reshape(b, c, q, g, hg).transpose(0, 3, 4, 1, 2)     # (b,g,H,c,q)
+    Bc = Bm.reshape(b, c, q, g, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, c, q, g, n).astype(jnp.float32)
+    a_cum = jnp.cumsum(ag, axis=-1)                             # (b,g,H,c,q)
+
+    # --- intra-chunk (diagonal blocks): quadratic attention-like einsums ---
+    Ldec = jnp.exp(_segsum(ag))                                 # (b,g,H,c,q,q)
+    scores = jnp.einsum("bcqgn,bckgn->bgcqk", Cc, Bc)           # (b,g,c,q,k)
+    y_diag = jnp.einsum("bgcqk,bgHcqk,bckgHp->bcqgHp", scores, Ldec, xg)
+
+    # --- chunk states: what each chunk contributes to the carried state ---
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)             # (b,g,H,c,q)
+    states = jnp.einsum("bckgn,bgHck,bckgHp->bcgHpn", Bc, decay_states, xg)
+
+    # --- inter-chunk recurrence (short scan over c chunks) ---
+    chunk_decay = jnp.exp(a_cum[..., -1])                       # (b,g,H,c)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    init_g = init_state.reshape(b, g, hg, p, n).astype(jnp.float32)
+
+    def step(carry, xs):
+        st, dec = xs                                # (b,g,H,p,n), (b,g,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                           # emit the PREVIOUS state
+
+    final, prev_states = jax.lax.scan(
+        step, init_g,
+        (states.transpose(1, 0, 2, 3, 4, 5),        # (c,b,g,H,p,n)
+         chunk_decay.transpose(3, 0, 1, 2)))        # (c,b,g,H)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4, 5)       # (b,c,g,H,p,n)
+
+    # --- state -> output within each chunk ---
+    state_decay = jnp.exp(a_cum)                                # (b,g,H,c,q)
+    y_off = jnp.einsum("bcqgn,bcgHpn,bgHcq->bcqgHp",
+                       Cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final.reshape(b, h, p, n)
+
+
+def ssd_step(x1, a1, B1, C1, state):
+    """Recurrent decode update.
+
+    x1: (B,H,P) (dt folded), a1: (B,H), B1/C1: (B,G,N), state: (B,H,P,N).
+    """
+    b, h, p = x1.shape
+    g, n = B1.shape[1], B1.shape[2]
+    hg = h // g
+    Bh = jnp.repeat(B1, hg, axis=1)                             # (B,H,N)
+    Ch = jnp.repeat(C1, hg, axis=1)
+    new = (state * jnp.exp(a1)[..., None, None]
+           + x1[..., None].astype(jnp.float32) * Bh[:, :, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", new, Ch.astype(jnp.float32))
+    return y, new
+
+
+# ---------------------------------------------------------------------------
+# block forward
+# ---------------------------------------------------------------------------
+
+def _proj_all(lp, cfg, xn):
+    b, s, _ = xn.shape
+    h = cfg.ssm_nheads
+    z = jnp.einsum("bsd,de->bse", xn, lp["wz"])
+    xs = jnp.einsum("bsd,de->bse", xn, lp["wx"])
+    Bm = jnp.einsum("bsd,de->bse", xn, lp["wB"])
+    Cm = jnp.einsum("bsd,de->bse", xn, lp["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", xn.astype(jnp.float32), lp["wdt"])
+    dt = jax.nn.softplus(dt + lp["dt_bias"])
+    return z, xs, Bm, Cm, dt
+
+
+def _finish(lp, cfg, y, z, x_in, dt):
+    """gated norm + out projection.  y: (B,S,H,P) f32."""
+    b, s, h, p = y.shape
+    D = lp["D"]
+    y = y + x_in.astype(jnp.float32) * dt[..., None] * D[None, None, :, None]
+    y = y.reshape(b, s, h * p)
+    z32 = z.astype(jnp.float32)
+    y = y * (z32 * jax.nn.sigmoid(z32))
+    y = L.ops.rmsnorm(y.astype(z.dtype), lp["norm"]["scale"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, lp["out_proj"])
+
+
+def block_train(lp: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    xn = L.norm_apply(lp["ln"], cfg, x)
+    b, s, _ = xn.shape
+    h, p = cfg.ssm_nheads, cfg.ssm_head_dim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    z, xs, Bm, Cm, dt = _proj_all(lp, cfg, xn)
+    xs = _causal_conv(xs, lp["conv_wx"], lp["conv_bx"])
+    Bm = _causal_conv(Bm, lp["conv_wB"], lp["conv_bB"])
+    Cm = _causal_conv(Cm, lp["conv_wC"], lp["conv_bC"])
+    xh = xs.reshape(b, s, h, p)
+    A = -jnp.exp(lp["A_log"])                                   # (H,)
+    a = A[None, None, :] * dt                                   # (B,S,H)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    y, _ = ssd_scan(xdt, a, Bm.reshape(b, s, g, n), Cm.reshape(b, s, g, n),
+                    cfg.ssm_chunk)
+    return x + _finish(lp, cfg, y, z, xh, dt).astype(x.dtype)
+
+
+def block_prefill(lp: dict, cfg: ModelConfig, x: jnp.ndarray):
+    """Returns (residual output, conv states dict, ssm state)."""
+    xn = L.norm_apply(lp["ln"], cfg, x)
+    b, s, _ = xn.shape
+    h, p = cfg.ssm_nheads, cfg.ssm_head_dim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    k = cfg.ssm_conv_kernel
+    z, xs, Bm, Cm, dt = _proj_all(lp, cfg, xn)
+    conv_state = {
+        "x": _tail(xs, k - 1), "B": _tail(Bm, k - 1), "C": _tail(Cm, k - 1)}
+    xs = _causal_conv(xs, lp["conv_wx"], lp["conv_bx"])
+    Bm = _causal_conv(Bm, lp["conv_wB"], lp["conv_bB"])
+    Cm = _causal_conv(Cm, lp["conv_wC"], lp["conv_bC"])
+    xh = xs.reshape(b, s, h, p)
+    A = -jnp.exp(lp["A_log"])
+    a = A[None, None, :] * dt
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    y, final = ssd_scan(xdt, a, Bm.reshape(b, s, g, n),
+                        Cm.reshape(b, s, g, n), cfg.ssm_chunk)
+    out = x + _finish(lp, cfg, y, z, xh, dt).astype(x.dtype)
+    return out, conv_state, final
+
+
+def _tail(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    s = x.shape[1]
+    if s >= m:
+        return x[:, s - m:]
+    return jnp.pad(x, ((0, 0), (m - s, 0), (0, 0)))
+
+
+def block_decode(lp: dict, cfg: ModelConfig, x1: jnp.ndarray,
+                 conv_state: dict, ssm_state: jnp.ndarray):
+    """x1: (B, 1, d).  Returns (y1, conv_state, ssm_state)."""
+    xn = L.norm_apply(lp["ln"], cfg, x1)
+    b = xn.shape[0]
+    h, p = cfg.ssm_nheads, cfg.ssm_head_dim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    z, xs, Bm, Cm, dt = _proj_all(lp, cfg, xn)
+    xs1, cx = _conv_step(xs[:, 0], conv_state["x"], lp["conv_wx"], lp["conv_bx"])
+    Bm1, cb = _conv_step(Bm[:, 0], conv_state["B"], lp["conv_wB"], lp["conv_bB"])
+    Cm1, cc = _conv_step(Cm[:, 0], conv_state["C"], lp["conv_wC"], lp["conv_bC"])
+    xh = xs1.reshape(b, h, p)
+    A = -jnp.exp(lp["A_log"])
+    a1 = A[None, :] * dt[:, 0]                                  # (B,H)
+    xdt = xh.astype(jnp.float32) * dt[:, 0, :, None]
+    y, new_state = ssd_step(xdt, a1, Bm1.reshape(b, g, n),
+                            Cm1.reshape(b, g, n), ssm_state)
+    out = x1 + _finish(lp, cfg, y[:, None], z, xh[:, None],
+                       dt).astype(x1.dtype)
+    return out, {"x": cx, "B": cb, "C": cc}, new_state
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        **L.embed_init(cfg, ks[0]),
+        "layers": block_init(cfg, ks[1], cfg.num_layers),
+        "ln_f": L.norm_init(cfg, cfg.d_model),
+    }
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict):
+    x = L.embed_tokens(params, cfg, batch["tokens"])
+
+    def body(h, lp):
+        return block_train(lp, cfg, h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.norm_apply(params["ln_f"], cfg, x)
+    # logits stay in the compute dtype: an f32 cast here would seed f32
+    # cotangents through the WHOLE backward residual chain (§Perf log).
+    return L.unembed(params, cfg, x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    del capacity  # SSM state is O(1) in sequence length
+    n, b = cfg.num_layers, batch
+    h, p, ds = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    g = cfg.ssm_ngroups
+    k = cfg.ssm_conv_kernel
+    dt = L.cdtype(cfg)
+    return {
+        "conv": {
+            "x": jnp.zeros((n, b, k - 1, cfg.d_inner), dt),
+            "B": jnp.zeros((n, b, k - 1, g * ds), dt),
+            "C": jnp.zeros((n, b, k - 1, g * ds), dt),
+        },
+        "ssm": jnp.zeros((n, b, h, p, ds), jnp.float32),
+    }
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
+    x = L.embed_tokens(params, cfg, batch["tokens"])
+
+    def body(h, lp):
+        out, conv, ssm = block_prefill(lp, cfg, h)
+        return out, (conv, ssm)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (conv, ssm) = jax.lax.scan(body, x, params["layers"])
+    x = L.norm_apply(params["ln_f"], cfg, x[:, -1:])
+    logits = L.unembed(params, cfg, x)[:, 0].astype(jnp.float32)
+    return logits, {"conv": conv, "ssm": ssm}
+
+
+def decode(params: dict, cfg: ModelConfig, cache: dict, tokens: jnp.ndarray,
+           pos: jnp.ndarray):
+    del pos  # SSM decode is position-free
+    x = L.embed_tokens(params, cfg, tokens)
+
+    def body(h, xs):
+        lp, conv, ssm = xs
+        out, conv, ssm = block_decode(lp, cfg, h, conv, ssm)
+        return out, (conv, ssm)
+
+    x, (conv, ssm) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["ssm"]))
+    x = L.norm_apply(params["ln_f"], cfg, x)
+    logits = L.unembed(params, cfg, x)[:, 0].astype(jnp.float32)
+    return logits, {"conv": conv, "ssm": ssm}

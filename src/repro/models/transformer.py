@@ -1,0 +1,175 @@
+"""Dense decoder-only transformer (families: dense, vlm).
+
+Layers are scanned (stacked params) so 80-layer configs lower to O(1) HLO.
+Supports GQA, RoPE / M-RoPE (vlm), QKV bias, sliding-window attention, and a
+ring-buffered KV cache for long-context decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    n = cfg.num_layers
+    return {
+        **L.embed_init(cfg, ks[0]),
+        "layers": {
+            "ln1": L.norm_init(cfg, cfg.d_model, n),
+            "attn": L.attn_init(cfg, ks[1], n),
+            "ln2": L.norm_init(cfg, cfg.d_model, n),
+            "mlp": L.mlp_init(cfg, ks[2], n),
+        },
+        "ln_f": L.norm_init(cfg, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# positions
+# ---------------------------------------------------------------------------
+
+def _positions(cfg: ModelConfig, b: int, s: int, offset=0):
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.arch_type == "vlm":
+        # M-RoPE: vision prefix laid out on a (t=0, h, w) grid, text sequential.
+        p = cfg.vision_tokens
+        side = max(int(p ** 0.5), 1)
+        idx = jnp.arange(s, dtype=jnp.int32)
+        is_vis = idx < p
+        t = jnp.where(is_vis, 0, idx)
+        h = jnp.where(is_vis, idx // side, idx)
+        w = jnp.where(is_vis, idx % side, idx)
+        pos3 = jnp.stack([t, h, w])[:, None, :] + offset
+        return jnp.broadcast_to(pos3, (3, b, s))
+    return pos
+
+
+def _rope(cfg: ModelConfig, positions):
+    if cfg.arch_type == "vlm":
+        return L.mrope_for(cfg, positions)
+    return L.rope_for(cfg, positions)
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+def _layer_train(cfg, lp, x, cos, sin):
+    x = x + L.attn_train(lp["attn"], cfg, L.norm_apply(lp["ln1"], cfg, x),
+                         cos, sin)
+    x = x + L.mlp_apply(lp["mlp"], cfg, L.norm_apply(lp["ln2"], cfg, x))
+    return x
+
+
+def _embed_in(params, cfg, batch):
+    x = L.embed_tokens(params, cfg, batch["tokens"])
+    if cfg.arch_type == "vlm" and "vision_embeds" in batch:
+        p = batch["vision_embeds"].shape[1]
+        x = jnp.concatenate(
+            [batch["vision_embeds"].astype(x.dtype), x[:, p:]], axis=1)
+        x = L.constrain_batch(x)   # re-anchor: concat drops the constraint
+    return x
+
+
+# ---------------------------------------------------------------------------
+# train / prefill / decode
+# ---------------------------------------------------------------------------
+
+def forward_hidden(params: dict, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    """Final hidden states (B, S, d) — used by the PPO critic value head."""
+    x = _embed_in(params, cfg, batch)
+    b, s, _ = x.shape
+    cos, sin = _rope(cfg, _positions(cfg, b, s))
+
+    def body(h, lp):
+        return _layer_train(cfg, lp, h, cos, sin), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.norm_apply(params["ln_f"], cfg, x)
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    x = forward_hidden(params, cfg, batch)
+    # logits stay in the compute dtype: an f32 cast here would seed f32
+    # cotangents through the WHOLE backward residual chain (§Perf log).
+    return L.unembed(params, cfg, x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    kv, hd, n = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    dt = L.cdtype(cfg)
+    return {
+        "k": jnp.zeros((n, batch, capacity, kv, hd), dt),
+        "v": jnp.zeros((n, batch, capacity, kv, hd), dt),
+    }
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
+    """Ingest the prompt; returns (last-token logits, filled cache)."""
+    x = _embed_in(params, cfg, batch)
+    b, s, _ = x.shape
+    cap = cache["k"].shape[2]
+    cos, sin = _rope(cfg, _positions(cfg, b, s))
+
+    def body(h, lp):
+        y, k, v = L.attn_prefill(lp["attn"], cfg,
+                                 L.norm_apply(lp["ln1"], cfg, h), cos, sin)
+        h = h + y
+        h = h + L.mlp_apply(lp["mlp"], cfg, L.norm_apply(lp["ln2"], cfg, h))
+        # store last `cap` positions (ring semantics when cap < s)
+        k = k[:, -cap:] if s >= cap else jnp.pad(
+            k, ((0, 0), (0, cap - s), (0, 0), (0, 0)))
+        v = v[:, -cap:] if s >= cap else jnp.pad(
+            v, ((0, 0), (0, cap - s), (0, 0), (0, 0)))
+        return h, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.norm_apply(params["ln_f"], cfg, x[:, -1:])
+    logits = L.unembed(params, cfg, x)[:, 0].astype(jnp.float32)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode(params: dict, cfg: ModelConfig, cache: dict, tokens: jnp.ndarray,
+           pos: jnp.ndarray):
+    """One decode step.  tokens: (B, 1); pos: () int32 — absolute position of
+    the incoming token (same for the whole batch; synchronized RL rollout).
+    """
+    x = L.embed_tokens(params, cfg, tokens)
+    b = x.shape[0]
+    cap = cache["k"].shape[2]
+    positions = _positions(cfg, b, 1, offset=pos)
+    cos, sin = _rope(cfg, positions)
+    slot = jax.lax.rem(pos, cap)
+    ar = jnp.arange(cap)
+    valid = ar <= pos  # ring overwrite keeps this exact for cap == window
+    if cfg.sliding_window > 0 and cap > cfg.sliding_window:
+        valid &= ar > pos - cfg.sliding_window
+    valid = jnp.broadcast_to(valid[None], (b, cap))
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        y, kc, vc = L.attn_decode(lp["attn"], cfg,
+                                  L.norm_apply(lp["ln1"], cfg, h),
+                                  cos, sin, kc, vc, slot, valid)
+        h = h + y
+        h = h + L.mlp_apply(lp["mlp"], cfg, L.norm_apply(lp["ln2"], cfg, h))
+        return h, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]))
+    x = L.norm_apply(params["ln_f"], cfg, x)
+    logits = L.unembed(params, cfg, x)[:, 0].astype(jnp.float32)
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (  # noqa: F401
+    adamw_init,
+    adamw_update,
+    global_norm,
+)
+from repro.optim.schedule import constant_schedule, cosine_schedule, wsd_schedule  # noqa: F401

@@ -1,0 +1,32 @@
+"""Learning-rate schedules (pure functions of the int step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(lr) * jnp.where(s < warmup, warm, cos)
+    return f
+
+
+def wsd_schedule(lr: float, warmup: int, stable: int, decay: int,
+                 min_ratio: float = 0.05):
+    """Warmup–stable–decay."""
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        dec = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        val = jnp.where(s < warmup, warm,
+                        jnp.where(s < warmup + stable, 1.0,
+                                  1.0 - (1 - min_ratio) * dec))
+        return jnp.float32(lr) * val
+    return f

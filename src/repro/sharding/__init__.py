@@ -1,0 +1,7 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_partition,
+    cache_specs,
+    data_axes,
+    param_specs,
+    to_named,
+)

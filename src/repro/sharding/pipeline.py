@@ -1,0 +1,88 @@
+"""Pipeline parallelism (paper Table 2 "PP") — GPipe schedule over a "pipe"
+mesh axis, expressed with shard_map + collective_permute.
+
+The stacked layer parameters (L, ...) are sharded on the layer axis across P
+pipe stages (L/P layers per stage).  The global batch is split into M
+microbatches; for M + P - 1 steps each stage runs its local layers on the
+microbatch it holds and ppermutes the activations to the next stage.  Stage 0
+injects fresh microbatches, stage P-1 accumulates outputs.  Bubble fraction
+is the classic (P-1)/(M+P-1); jax autodiff differentiates straight through
+the schedule (the transpose of ppermute is the reverse permute), giving the
+1F1B-equivalent memory profile when each step is rematerialized.
+
+This is an optional composition: the dense families run it through
+``pipeline_forward`` when the mesh carries a "pipe" axis.  It composes with
+the data/model sharding of everything else (shard_map is over the pipe axis
+only; inner ops remain jit-sharded over the other axes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_forward(layer_fn, stacked_params, x, mesh, *,
+                     microbatches: int, axis: str = "pipe", consts=()):
+    """Run ``layer_fn`` (params_slice, x, *consts) -> x over L stacked layers
+    as a P-stage pipeline.
+
+    stacked_params: pytree with leading layer axis L (L % P == 0).
+    x: (B, ...) global batch (B % microbatches == 0).
+    consts: extra replicated arrays every stage needs (e.g. RoPE tables) —
+    positions are batch-invariant so one copy serves all microbatches.
+    Returns (B, ...) outputs — numerically identical to the sequential scan.
+    Call under ``jax.jit`` (shard_map autodiff needs it).
+    """
+    nstages = mesh.shape[axis]
+    b = x.shape[0]
+    m = microbatches
+    assert b % m == 0, (b, m)
+    mb = b // m
+    xs = x.reshape((m, mb) + x.shape[1:])
+
+    def stage_fn(params_blk, xs_blk, *consts_blk):
+        # params_blk: (L/P, ...) this stage's layers; xs_blk: (M, mb, ...)
+        # replicated input microbatches (only stage 0 reads them).
+        stage = jax.lax.axis_index(axis)
+        state = jnp.zeros_like(xs_blk[0])
+        acc = jnp.zeros_like(xs_blk)
+
+        def run_local(h):
+            def body(carry, lp):
+                return layer_fn(lp, carry, *consts_blk), None
+            out, _ = jax.lax.scan(body, h, params_blk)
+            return out
+
+        perm = [(i, i + 1) for i in range(nstages - 1)]
+        for t in range(m + nstages - 1):
+            inject = xs_blk[min(t, m - 1)]
+            h = jnp.where(stage == 0, inject, state)
+            out = jax.checkpoint(run_local)(h)
+            # stage P-1 finished microbatch t-(P-1) at step t
+            j = t - (nstages - 1)
+            if j >= 0:
+                keep = (stage == nstages - 1)
+                acc = acc.at[j].add(jnp.where(keep, out, 0.0))
+            state = jax.lax.ppermute(out, axis, perm)
+        # deliver the accumulated outputs from the last stage to everyone
+        return jax.lax.psum(acc, axis)
+
+    pspec = jax.tree.map(lambda _: P(axis), stacked_params)
+    cspecs = tuple(jax.tree.map(lambda _: P(), c) for c in consts)
+    fn = shard_map(stage_fn, mesh=mesh,
+                   in_specs=(pspec, P()) + cspecs, out_specs=P(),
+                   check_rep=False)
+    out = fn(stacked_params, xs, *consts)
+    return out.reshape((b,) + x.shape[1:])
+
+
+def sequential_forward(layer_fn, stacked_params, x):
+    """Reference: the plain layer scan."""
+    def body(carry, lp):
+        return layer_fn(lp, carry), None
+    out, _ = jax.lax.scan(body, x, stacked_params)
+    return out

@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# CPU container: high matmul precision so allclose tolerances are meaningful.
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,122 @@
+"""GRPO / PPO / DAPO algorithm-level unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RLConfig
+from repro.core import grpo, ppo
+
+
+def test_token_logprobs_manual(rng):
+    logits = jax.random.normal(rng, (2, 5, 7))
+    tokens = jax.random.randint(jax.random.fold_in(rng, 1), (2, 5), 0, 7)
+    lp = grpo.token_logprobs(logits, tokens)
+    want = np.zeros((2, 4))
+    ls = np.asarray(jax.nn.log_softmax(logits, axis=-1))
+    tk = np.asarray(tokens)
+    for b in range(2):
+        for t in range(4):
+            want[b, t] = ls[b, t, tk[b, t + 1]]
+    np.testing.assert_allclose(np.asarray(lp), want, rtol=1e-5, atol=1e-6)
+
+
+def test_group_advantages_zero_mean_unit_std(rng):
+    r = jax.random.normal(rng, (8, 16)) * 3 + 1
+    adv = np.asarray(grpo.group_advantages(r))
+    np.testing.assert_allclose(adv.mean(axis=1), 0, atol=1e-5)
+    np.testing.assert_allclose(adv.std(axis=1), 1, atol=1e-2)
+
+
+def test_grpo_loss_zero_at_identity():
+    """ratio == 1 and ref == policy -> pure pg term == -adv (clipped), and
+    the KL term vanishes."""
+    rl = RLConfig(kl_coef=0.5)
+    b, t = 4, 6
+    logp = jnp.full((b, t), -1.0)
+    mask = jnp.ones((b, t))
+    adv = jnp.zeros((b,))
+    loss, m = grpo.grpo_loss(logp, logp, logp, adv, mask, rl)
+    assert abs(float(loss)) < 1e-6
+    assert abs(float(m["kl"])) < 1e-7
+    assert float(m["ratio_mean"]) == pytest.approx(1.0)
+
+
+def test_grpo_clipping_bounds():
+    rl = RLConfig(clip_eps=0.2)
+    b, t = 1, 1
+    old = jnp.zeros((b, t))
+    mask = jnp.ones((b, t))
+    adv = jnp.ones((b,))
+    # ratio far above 1+eps: positive advantage gain is clipped at 1.2
+    lp_hi = jnp.full((b, t), 2.0)
+    loss_hi, _ = grpo.grpo_loss(lp_hi, old, old, adv, mask,
+                                rl.replace(kl_coef=0.0))
+    assert float(loss_hi) == pytest.approx(-1.2, rel=1e-5)
+    # negative advantage with tiny ratio is NOT clipped on that side (min)
+    loss_neg, _ = grpo.grpo_loss(lp_hi, old, old, -adv, mask,
+                                 rl.replace(kl_coef=0.0))
+    assert float(loss_neg) == pytest.approx(np.exp(2.0), rel=1e-5)
+
+
+def test_dapo_decoupled_clip():
+    rl = RLConfig(algorithm="dapo", clip_eps=0.2, clip_eps_high=0.28)
+    old = jnp.zeros((1, 1))
+    mask = jnp.ones((1, 1))
+    adv = jnp.ones((1,))
+    lp = jnp.full((1, 1), 2.0)
+    loss, _ = grpo.grpo_loss(lp, old, old, adv, mask, rl)
+    assert float(loss) == pytest.approx(-1.28, rel=1e-5)  # upper clip = 1.28
+
+
+def test_kl_k3_positive(rng):
+    rl = RLConfig(kl_coef=1.0)
+    logp = jax.random.normal(rng, (4, 8))
+    ref = jax.random.normal(jax.random.fold_in(rng, 1), (4, 8))
+    _, m = grpo.grpo_loss(logp, logp, ref, jnp.zeros((4,)),
+                          jnp.ones((4, 8)), rl)
+    assert float(m["kl"]) > 0  # k3 estimator is non-negative
+
+
+def test_gae_matches_naive(rng):
+    b, t = 3, 12
+    rewards = np.asarray(jax.random.normal(rng, (b, t)))
+    values = np.asarray(jax.random.normal(jax.random.fold_in(rng, 1), (b, t)))
+    mask = np.ones((b, t), np.float32)
+    mask[:, -3:] = 0
+    gamma, lam = 0.97, 0.93
+    adv, ret = ppo.gae(jnp.asarray(rewards), jnp.asarray(values),
+                       jnp.asarray(mask), gamma, lam)
+    want = np.zeros((b, t))
+    for bi in range(b):
+        run = 0.0
+        for ti in reversed(range(t)):
+            nv = values[bi, ti + 1] if ti + 1 < t else 0.0
+            delta = rewards[bi, ti] + gamma * nv * mask[bi, ti] - values[bi, ti]
+            run = delta + gamma * lam * mask[bi, ti] * run
+            want[bi, ti] = run
+    np.testing.assert_allclose(np.asarray(adv), want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ret), want + values,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_pf_filter_keeps_extremes(rng):
+    r = jnp.arange(16.0)
+    w = np.asarray(ppo.pf_filter(r, keep_best=0.25, keep_worst=0.25))
+    assert w[:4].sum() == 4      # worst quartile kept
+    assert w[-4:].sum() == 4     # best quartile kept
+    assert w[6:10].sum() == 0    # middle dropped
+
+
+def test_ppo_value_clip(rng):
+    rl = RLConfig(clip_eps=0.2)
+    b, t = 2, 4
+    z = jnp.zeros((b, t))
+    mask = jnp.ones((b, t))
+    vals = jnp.full((b, t), 1.0)
+    old_vals = jnp.zeros((b, t))
+    returns = jnp.full((b, t), 2.0)
+    pg, vloss = ppo.ppo_losses(z, z, z, vals, old_vals, returns, mask, rl)
+    # value moved 1.0 > eps from old: clipped branch (0.2 - 2)^2 dominates
+    assert float(vloss) == pytest.approx(0.5 * max((1 - 2) ** 2,
+                                                   (0.2 - 2) ** 2), rel=1e-5)

@@ -1,0 +1,78 @@
+"""Launch-layer tests: program builders, skip policy, capacity logic, and a
+small-mesh lower+compile integration check (the dry-run mechanics at 8
+devices instead of 512 so CI stays fast — tests/conftest keeps 1 real device;
+here we only need the BUILDERS, not multi-device lowering)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES
+from repro.launch import analysis, hlo_cost
+from repro.launch.specs import (SkipPair, decode_capacity, effective_config,
+                                train_batch_structs)
+
+
+def test_effective_config_long_ctx_window():
+    cfg = effective_config("yi-6b", "long_500k")
+    assert cfg.sliding_window == 8192          # SWA override for dense arch
+    cfg = effective_config("mixtral-8x7b", "long_500k")
+    assert cfg.sliding_window == 4096          # native window preserved
+    cfg = effective_config("mamba2-1.3b", "long_500k")
+    assert cfg.is_attention_free               # untouched
+
+
+def test_whisper_long_ctx_skipped():
+    with pytest.raises(SkipPair):
+        effective_config("whisper-large-v3", "long_500k")
+
+
+def test_decode_capacity_ring():
+    cfg = effective_config("yi-6b", "long_500k")
+    assert decode_capacity(cfg, INPUT_SHAPES["long_500k"]) == 8192
+    cfg = effective_config("yi-6b", "decode_32k")
+    assert decode_capacity(cfg, INPUT_SHAPES["decode_32k"]) == 32768
+
+
+def test_train_batch_structs_shapes():
+    cfg = effective_config("qwen2-vl-72b", "train_4k")
+    b = train_batch_structs(cfg, INPUT_SHAPES["train_4k"])
+    assert b["tokens"].shape == (256, 4096)
+    assert b["old_logp"].shape == (256, 4095)
+    assert b["vision_embeds"].shape == (256, cfg.vision_tokens, cfg.d_model)
+    cfg = effective_config("whisper-large-v3", "train_4k")
+    b = train_batch_structs(cfg, INPUT_SHAPES["train_4k"])
+    assert b["frames"].shape == (256, 1500, 1280)
+
+
+def test_model_flops_sane():
+    cfg = effective_config("yi-6b", "train_4k")
+    n = analysis.active_params(cfg)
+    assert 5.5e9 < n < 7.5e9        # ~6B params
+    cfg = effective_config("qwen1.5-110b", "train_4k")
+    assert 95e9 < analysis.active_params(cfg) < 125e9
+    moe = effective_config("llama4-maverick-400b-a17b", "train_4k")
+    assert analysis.total_params(moe) > 5 * analysis.active_params(moe)
+
+
+def test_hlo_collective_ring_factors():
+    assert hlo_cost._ring_factor("all-reduce", 4) == pytest.approx(1.5)
+    assert hlo_cost._ring_factor("all-gather", 16) == pytest.approx(15 / 16)
+    assert hlo_cost._ring_factor("reduce-scatter", 4) == 3.0
+    assert hlo_cost._ring_factor("all-reduce", 1) == 0.0
+
+
+def test_hlo_parser_on_multidevice_program():
+    """End-to-end parser check on a sharded scan program (1 device)."""
+    def f(x, ws):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h.sum()
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((4, 8), jnp.float32),
+        jax.ShapeDtypeStruct((3, 8, 8), jnp.float32)).compile()
+    hc = hlo_cost.analyze_hlo(c.as_text())
+    assert hc.flops == pytest.approx(2 * 4 * 8 * 8 * 3, rel=0.01)
+    assert hc.bytes > 0
+    assert hc.collective_bytes == 0.0

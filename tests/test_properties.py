@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import grpo
+from repro.core.transfer_dock import (DispatchLedger, TransferDock, cv_gb,
+                                      tcv_gb, tcv_td_gb)
+from repro.data.tokenizer import ByteTokenizer
+from repro.kernels import ops, ref
+from repro.models import mamba2
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(1, 64), st.integers(1, 32), st.integers(2, 64))
+@settings(**SETTINGS)
+def test_tokenizer_roundtrip(seed, n, length):
+    rng = np.random.default_rng(seed)
+    text = "".join(chr(rng.integers(32, 127)) for _ in range(length))
+    tok = ByteTokenizer()
+    ids = tok.encode(text)
+    assert tok.decode(ids) == text
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8), st.integers(2, 8))
+@settings(**SETTINGS)
+def test_advantage_translation_invariance(seed, g, n):
+    """Group advantages are invariant to per-group reward shifts."""
+    rng = np.random.default_rng(seed)
+    r = rng.normal(size=(g, n)).astype(np.float32)
+    shift = rng.normal(size=(g, 1)).astype(np.float32)
+    a1 = np.asarray(grpo.group_advantages(jnp.asarray(r)))
+    a2 = np.asarray(grpo.group_advantages(jnp.asarray(r + shift)))
+    np.testing.assert_allclose(a1, a2, rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4), st.integers(1, 3),
+       st.sampled_from([8, 16, 32]))
+@settings(**SETTINGS)
+def test_rope_preserves_norm(seed, b, h, d):
+    """Rotation preserves the norm of every (x1, x2) pair."""
+    key = jax.random.PRNGKey(seed)
+    s = 8
+    x = jax.random.normal(key, (b, s, h, d))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    cos, sin = ops.rope_tables(pos, d, 10_000.0)
+    y = ref.rope(x, cos[:, :, None, :], sin[:, :, None, :])
+    nx = np.linalg.norm(np.asarray(x), axis=-1)
+    ny = np.linalg.norm(np.asarray(y), axis=-1)
+    np.testing.assert_allclose(nx, ny, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunk_invariance(seed):
+    """SSD output must not depend on the chunk size."""
+    key = jax.random.PRNGKey(seed)
+    b, s, h, p, g, n = 1, 32, 2, 4, 1, 8
+    x = jax.random.normal(key, (b, s, h, p))
+    a = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (b, s, h))) * 0.3
+    B = jax.random.normal(jax.random.fold_in(key, 2), (b, s, g, n)) * 0.3
+    C = jax.random.normal(jax.random.fold_in(key, 3), (b, s, g, n)) * 0.3
+    y8, st8 = mamba2.ssd_scan(x, a, B, C, chunk=8)
+    y16, st16 = mamba2.ssd_scan(x, a, B, C, chunk=16)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y16),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st8), np.asarray(st16),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(1, 6), st.integers(1, 50))
+@settings(**SETTINGS)
+def test_dock_conservation(S, n):
+    """Every byte put is retrievable; warehouse shards partition the index
+    space exactly."""
+    dock = TransferDock(S, {"w": 0}, DispatchLedger())
+    rows = np.arange(n * 3, dtype=np.float32).reshape(n, 3)
+    dock.put("x", list(range(n)), rows, src_node=0)
+    sizes = [len(wh.store.get("x", {})) for wh in dock.warehouses]
+    assert sum(sizes) == n
+    got = dock.get("w", "x", list(range(n)), dst_node=0)
+    np.testing.assert_array_equal(got, rows)
+
+
+@given(st.integers(1, 4096), st.integers(1, 64), st.integers(128, 8192),
+       st.integers(1, 8), st.integers(128, 16384), st.integers(1, 8),
+       st.integers(2, 16), st.integers(1, 128))
+@settings(**SETTINGS)
+def test_td_volume_always_smaller(G, N, PL, n, SL, M, C, S):
+    """Eq (4) per-warehouse volume < Eq (2) centralized volume whenever
+    S > 1 (metadata overhead never dominates)."""
+    central = tcv_gb(G, N, 4, PL, n, SL, M)
+    td = tcv_td_gb(G, N, 4, PL, n, SL, M, C, S)
+    if S > 1:
+        assert td < central * (1.0 + C) / S + 1e-9 or td < central
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 5))
+@settings(max_examples=15, deadline=None)
+def test_grpo_loss_mask_invariance(seed, pad):
+    """Adding fully-masked padding tokens must not change the loss."""
+    from repro.configs.base import RLConfig
+    key = jax.random.PRNGKey(seed)
+    rl = RLConfig()
+    b, t = 2, 6
+    lp = -jnp.abs(jax.random.normal(key, (b, t)))
+    old = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (b, t)))
+    refp = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (b, t)))
+    adv = jax.random.normal(jax.random.fold_in(key, 3), (b,))
+    mask = jnp.ones((b, t))
+    l1, _ = grpo.grpo_loss(lp, old, refp, adv, mask, rl)
+    padz = jnp.zeros((b, pad))
+    l2, _ = grpo.grpo_loss(
+        jnp.concatenate([lp, padz - 1], 1),
+        jnp.concatenate([old, padz - 2], 1),
+        jnp.concatenate([refp, padz - 3], 1),
+        adv, jnp.concatenate([mask, padz], 1), rl)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5, atol=1e-6)

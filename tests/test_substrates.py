@@ -1,0 +1,212 @@
+"""Optimizer, schedules, checkpoint, data pipeline, rollout engine, HLO cost
+parser, sharding rules."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_smoke_config
+from repro.configs.base import RLConfig
+from repro.core.rollout import RolloutEngine
+from repro.data.prompts import PromptDataset, arithmetic_task, pattern_task
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import build_model
+from repro.optim import (adamw_init, adamw_update, cosine_schedule,
+                         global_norm, wsd_schedule)
+from repro.sharding import param_specs
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_numpy_reference(rng):
+    params = {"w": jax.random.normal(rng, (4, 3))}
+    grads = {"w": jax.random.normal(jax.random.fold_in(rng, 1), (4, 3))}
+    state = adamw_init(params)
+    lr, b1, b2, eps = 1e-2, 0.9, 0.95, 1e-8
+    new, st = adamw_update(grads, state, params, lr=lr, betas=(b1, b2))
+    g = np.asarray(grads["w"], np.float64)
+    m = (1 - b1) * g
+    v = (1 - b2) * g * g
+    mhat, vhat = m / (1 - b1), v / (1 - b2)
+    want = np.asarray(params["w"], np.float64) - lr * mhat / (np.sqrt(vhat) + eps)
+    np.testing.assert_allclose(np.asarray(new["w"]), want, rtol=1e-5, atol=1e-6)
+    assert int(st.step) == 1
+
+
+def test_adamw_grad_clip(rng):
+    params = {"w": jnp.zeros((10,))}
+    grads = {"w": jnp.full((10,), 100.0)}
+    state = adamw_init(params)
+    new_clip, _ = adamw_update(grads, state, params, lr=1.0, grad_clip=1.0)
+    new_raw, _ = adamw_update(grads, adamw_init(params), params, lr=1.0)
+    # direction identical, clipped step not larger
+    assert float(jnp.max(jnp.abs(new_clip["w"]))) <= float(
+        jnp.max(jnp.abs(new_raw["w"]))) + 1e-6
+
+
+def test_global_norm():
+    tree = {"a": jnp.ones((3,)) * 2, "b": jnp.ones((4,)) * 3}
+    want = np.sqrt(3 * 4 + 4 * 9)
+    assert float(global_norm(tree)) == pytest.approx(want, rel=1e-6)
+
+
+def test_schedules():
+    cos = cosine_schedule(1.0, warmup=10, total=110)
+    assert float(cos(jnp.int32(0))) == 0.0
+    assert float(cos(jnp.int32(10))) == pytest.approx(1.0)
+    assert float(cos(jnp.int32(110))) == pytest.approx(0.1, rel=1e-3)
+    wsd = wsd_schedule(1.0, warmup=5, stable=10, decay=10)
+    assert float(wsd(jnp.int32(7))) == pytest.approx(1.0)
+    assert float(wsd(jnp.int32(25))) == pytest.approx(0.05, rel=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(rng):
+    tree = {"layers": {"w": jax.random.normal(rng, (4, 5)),
+                       "b": jnp.arange(3, dtype=jnp.int32)},
+            "head": jax.random.normal(jax.random.fold_in(rng, 1), (5,))}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        save_pytree(path, tree, step=7)
+        like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+        back = load_pytree(path, like)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_pattern_task_reward():
+    task = pattern_task()
+    ds = PromptDataset(task, max_prompt_len=16, seed=0)
+    prompts, lens, metas = ds.sample(4)
+    assert prompts.shape == (4, 16)
+    target = metas[0]["target"]
+    good = np.full((1, 8), target, np.int32)
+    assert ds.score([metas[0]], good)[0] == 1.0
+    bad = np.full((1, 8), (target + 1) % 255, np.int32)
+    assert ds.score([metas[0]], bad)[0] == 0.0
+
+
+def test_arithmetic_task_reward():
+    task = arithmetic_task()
+    ds = PromptDataset(task, max_prompt_len=16, seed=0)
+    _, _, metas = ds.sample(1)
+    tok = ByteTokenizer()
+    right = np.array([tok.encode(str(metas[0]["sum"]), add_bos=False)
+                      + [tok.eos_id]], np.int32)
+    assert ds.score(metas, right)[0] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# rollout engine
+# ---------------------------------------------------------------------------
+
+def test_rollout_stops_at_eos_and_masks(rng):
+    cfg = get_smoke_config("yi-6b").replace(dtype="float32", remat=False)
+    m = build_model(cfg)
+    params = m.init(cfg, rng)
+    tok = ByteTokenizer()
+    eng = RolloutEngine(cfg, max_new=8, eos_id=tok.eos_id, pad_id=tok.pad_id,
+                        temperature=1.0)
+    prompts = np.random.default_rng(0).integers(
+        0, 255, (4, 6)).astype(np.int32)
+    res = eng.generate(params, prompts, jax.random.PRNGKey(0))
+    assert res.tokens.shape[1] == 6 + 8
+    for i in range(4):
+        n = res.lengths[i]
+        assert res.response_mask[i, :6].sum() == 0          # prompt unmasked
+        assert res.response_mask[i, 6:6 + n].sum() == n     # response masked
+        assert res.response_mask[i, 6 + n:].sum() == 0      # pad unmasked
+        gen = res.tokens[i, 6:6 + n]
+        if tok.eos_id in gen.tolist():
+            assert gen.tolist().index(tok.eos_id) == n - 1  # stops at EOS
+        assert (res.tokens[i, 6 + n:] == tok.pad_id).all()
+
+
+def test_rollout_greedy_deterministic(rng):
+    cfg = get_smoke_config("yi-6b").replace(dtype="float32", remat=False)
+    m = build_model(cfg)
+    params = m.init(cfg, rng)
+    tok = ByteTokenizer()
+    eng = RolloutEngine(cfg, max_new=6, eos_id=tok.eos_id, pad_id=tok.pad_id,
+                        greedy=True)
+    prompts = np.ones((2, 4), np.int32) * 65
+    r1 = eng.generate(params, prompts, jax.random.PRNGKey(0))
+    r2 = eng.generate(params, prompts, jax.random.PRNGKey(99))
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def _mesh(shape=(2, 4)):
+    # AbstractMesh: the sharding RULES only need shapes/names, not devices
+    return jax.sharding.AbstractMesh(
+        shape, ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_param_specs_divisibility(rng):
+    mesh = _mesh()
+    for arch in ("yi-6b", "mixtral-8x7b", "mamba2-1.3b", "whisper-large-v3"):
+        cfg = get_smoke_config(arch)
+        m = build_model(cfg)
+        ps = jax.eval_shape(lambda: m.init(cfg, jax.random.PRNGKey(0)))
+        specs = param_specs(cfg, ps, mesh, stage="train")
+        flat_p = jax.tree.leaves(ps)
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_p) == len(flat_s)
+        for leaf, spec in zip(flat_p, flat_s):
+            for dim, ax in zip(leaf.shape, spec):
+                if ax is None:
+                    continue
+                size = (np.prod([mesh.shape[a] for a in ax])
+                        if isinstance(ax, tuple) else mesh.shape[ax])
+                assert dim % size == 0, (arch, leaf.shape, spec)
+
+
+def test_train_gen_layouts_differ(rng):
+    mesh = _mesh()
+    cfg = get_smoke_config("yi-6b")
+    m = build_model(cfg)
+    ps = jax.eval_shape(lambda: m.init(cfg, jax.random.PRNGKey(0)))
+    t = param_specs(cfg, ps, mesh, stage="train")
+    g = param_specs(cfg, ps, mesh, stage="gen", gen_mode="tp")
+    t_flat = jax.tree.leaves(t, is_leaf=lambda x: isinstance(x, P))
+    g_flat = jax.tree.leaves(g, is_leaf=lambda x: isinstance(x, P))
+    assert any(a != b for a, b in zip(t_flat, g_flat))
+
+
+# ---------------------------------------------------------------------------
+# HLO cost parser
+# ---------------------------------------------------------------------------
+
+def test_hlo_cost_trip_count_multiplier():
+    from repro.launch import hlo_cost
+    def f(x, ws):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h.sum()
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((8, 16), jnp.float32),
+        jax.ShapeDtypeStruct((5, 16, 16), jnp.float32)).compile()
+    hc = hlo_cost.analyze_hlo(c.as_text())
+    want = 2 * 8 * 16 * 16 * 5      # dot flops × trip count
+    assert hc.flops == pytest.approx(want, rel=0.01)
+    assert 5.0 in hc.trip_counts
