@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.core.resharding import Resharder, tree_device_bytes
+from repro.launch.mesh import make_mesh
 from repro.launch.specs import params_structs
 from repro.models.model import build_model
 from repro.sharding import param_specs
@@ -51,8 +52,7 @@ def analytic_qwen32b():
 
 def measured_smoke(arch: str = "qwen2.5-32b"):
     cfg = get_smoke_config(arch).replace(dtype="float32")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     model = build_model(cfg)
     params = model.init(cfg, jax.random.PRNGKey(0))
     t = param_specs(cfg, params, mesh, stage="train")

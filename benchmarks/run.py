@@ -5,6 +5,7 @@
   Figure 9 -> bench_linearity      (cluster linearity, TD vs central)
   Figure 10-> bench_reshard_memory (allgather-swap memory release)
   kernels  -> bench_kernels        (fused-kernel micro-benchmarks)
+  serving  -> bench_serving        (sync vs continuous-batching generation)
   Fig. 11  -> bench_moe_scale      (400B-class MoE at production scale)
   roofline -> roofline_table       (renders benchmarks/results/*.json)
 
@@ -16,7 +17,7 @@ import sys
 import time
 
 SECTIONS = ["dispatch", "linearity", "reshard_memory", "kernels", "e2e",
-            "moe_scale", "roofline"]
+            "serving", "moe_scale", "roofline"]
 
 
 def main() -> None:

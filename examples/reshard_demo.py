@@ -10,6 +10,7 @@ import jax
 
 from repro.configs import ALL_ARCHS, get_smoke_config
 from repro.core.resharding import Resharder, tree_device_bytes
+from repro.launch.mesh import make_mesh
 from repro.models.model import build_model
 from repro.sharding import param_specs
 
@@ -24,8 +25,7 @@ def main():
     cfg = get_smoke_config(args.arch).replace(dtype="float32", remat=False)
     model = build_model(cfg)
     params = model.init(cfg, jax.random.PRNGKey(0))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     t = param_specs(cfg, params, mesh, stage="train")
     g = param_specs(cfg, params, mesh, stage="gen", gen_mode="tp")
 

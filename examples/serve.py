@@ -1,8 +1,16 @@
-"""Batched serving example: load (or init) a model in the GENERATION layout
-produced by the resharding flow and serve batched requests through the
-rollout engine — the generation-stage half of the system, standalone.
+"""Request-loop serving demo: continuous batching over the paged KV cache.
 
-    PYTHONPATH=src python examples/serve.py --arch mamba2-1.3b
+Loads (or inits) a model in the GENERATION layout produced by the resharding
+flow, then drives the ``ServingEngine`` like an online server: requests
+arrive over several "ticks", each engine step admits what fits, decodes one
+token for every active slot, and evicts finished sequences immediately —
+freed slots refill from the queue with no batch barrier.  Per-request
+latency / TTFT stats are printed at the end.
+
+    PYTHONPATH=src python examples/serve.py --arch yi-6b
+
+Use ``--slots`` smaller than the request count to watch refill in action,
+``--blocks`` to shrink the KV pool until preemption kicks in.
 """
 import argparse
 import time
@@ -12,37 +20,44 @@ import numpy as np
 
 from repro.configs import ALL_ARCHS, get_smoke_config
 from repro.core.resharding import Resharder
-from repro.core.rollout import RolloutEngine
 from repro.data.tokenizer import ByteTokenizer
+from repro.launch.mesh import make_mesh
 from repro.models.model import build_model
+from repro.serve.engine import ServingEngine
 from repro.sharding import param_specs
 
 REQUESTS = [
-    "hello world",
-    "repeat a:",
-    "the quick brown fox",
-    "12+34=",
+    ("hello world", 24),
+    ("repeat a:", 8),
+    ("the quick brown fox", 32),
+    ("12+34=", 6),
+    ("tell me a story", 40),
+    ("ok", 4),
+    ("jumps over the lazy dog", 16),
+    ("2*3=", 6),
 ]
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b", choices=ALL_ARCHS)
-    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--blocks", type=int, default=0,
+                    help="KV pool blocks (0 = enough for all slots)")
     ap.add_argument("--greedy", action="store_true")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).replace(dtype="float32", remat=False)
-    assert cfg.arch_type not in ("vlm", "audio"), \
-        "serve demo uses text prompts; pick a text arch"
+    assert cfg.arch_type in ("dense", "moe"), \
+        "serve demo uses text prompts; pick a dense or moe arch"
     tok = ByteTokenizer()
     model = build_model(cfg)
     params = model.init(cfg, jax.random.PRNGKey(0))
 
     # move weights into the generation layout (the serving-side of the
     # resharding flow; on one device this is a no-op data-wise)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     t = param_specs(cfg, params, mesh, stage="train")
     g = param_specs(cfg, params, mesh, stage="gen", gen_mode="tp")
     gen_params, _, led = Resharder(mesh, t, g, use_swap=True).to_generation(
@@ -50,19 +65,37 @@ def main():
     print(f"resharded to generation layout "
           f"(D2H released {led.d2h_bytes / 1e6:.1f} MB/device)")
 
-    engine = RolloutEngine(cfg, max_new=args.max_new, eos_id=tok.eos_id,
-                           pad_id=tok.pad_id, greedy=args.greedy)
-    ids = [tok.encode(r) for r in REQUESTS]
-    batch = tok.pad_batch(ids, max(len(i) for i in ids))
+    max_seq = max(len(tok.encode(r)) + n for r, n in REQUESTS)
+    engine = ServingEngine(
+        cfg, max_new=48, eos_id=tok.eos_id, pad_id=tok.pad_id,
+        greedy=args.greedy, max_slots=args.slots,
+        block_size=args.block_size, max_seq_len=max_seq,
+        num_blocks=args.blocks or None)
+
+    # online loop: two requests arrive per tick, the engine never waits for
+    # a full batch to form
+    outs, rid2text = [], {}
     t0 = time.perf_counter()
-    res = engine.generate(gen_params, batch, jax.random.PRNGKey(1))
+    pending = list(REQUESTS)
+    while pending or not engine.sched.idle:
+        for text, max_new in pending[:2]:
+            rid = engine.submit(tok.encode(text), max_new=max_new)
+            rid2text[rid] = text
+        pending = pending[2:]
+        outs.extend(engine.step(gen_params))
     dt = time.perf_counter() - t0
-    new_tokens = int(res.lengths.sum())
-    print(f"served {len(REQUESTS)} requests, {new_tokens} tokens "
-          f"in {dt:.2f}s ({new_tokens / dt:.1f} tok/s)")
-    for r, row, n in zip(REQUESTS, res.tokens, res.lengths):
-        out = tok.decode(row[batch.shape[1]:batch.shape[1] + n])
-        print(f"  {r!r} -> {out!r}")
+
+    new_tokens = sum(len(o.gen) for o in outs)
+    lats = sorted(o.latency_s for o in outs)
+    print(f"\nserved {len(outs)} requests / {new_tokens} tokens in {dt:.2f}s "
+          f"({new_tokens / dt:.1f} tok/s) over {engine.steps} engine steps")
+    print(f"latency p50 {lats[len(lats) // 2] * 1e3:.0f} ms, "
+          f"p99 {lats[-1] * 1e3:.0f} ms")
+    for o in sorted(outs, key=lambda o: o.rid):
+        txt = tok.decode(o.gen)
+        pre = f" ({o.preemptions} preemptions)" if o.preemptions else ""
+        print(f"  [{o.rid}] {rid2text[o.rid]!r} -> {txt!r}  "
+              f"{len(o.gen)} tok, {o.latency_s * 1e3:.0f} ms{pre}")
 
 
 if __name__ == "__main__":

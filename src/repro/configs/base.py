@@ -119,6 +119,10 @@ class RLConfig:
     weight_decay: float = 0.0
     grad_clip: float = 1.0
     zero_optimizer: bool = False     # ZeRO-shard optimizer moments over data axis
+    # --- generation engine ---
+    rollout_engine: str = "sync"     # sync (batch RolloutEngine) | serving
+    serve_max_slots: int = 8         # continuous-batching slot count
+    serve_block_size: int = 16       # paged KV-cache block size (tokens)
     # --- dataflow (the paper's contribution) ---
     use_transfer_dock: bool = True   # False => centralized replay buffer baseline
     num_warehouses: int = 4          # S, usually = #nodes

@@ -82,9 +82,12 @@ def make_train_step(cfg: ModelConfig, rl: RLConfig, lr_schedule=None):
             loss = loss + cfg.router_aux_coef * aux
             metrics["moe_aux"] = aux
         if rl.entropy_coef:
-            # masked mean token entropy (cheap proxy via sampled logp)
-            metrics["neg_logp"] = -jnp.sum(logp * mask) / jnp.maximum(
+            # masked mean token entropy (cheap proxy via sampled logp),
+            # SUBTRACTED as a bonus so the objective actually explores
+            neg_logp = -jnp.sum(logp * mask) / jnp.maximum(
                 jnp.sum(mask), 1.0)
+            loss = loss - rl.entropy_coef * neg_logp
+            metrics["neg_logp"] = neg_logp
         return loss, metrics
 
     def train_step(params, opt_state, batch):

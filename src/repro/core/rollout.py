@@ -28,6 +28,25 @@ class RolloutResult:
     lengths: np.ndarray         # (B,) #generated tokens (incl. EOS)
 
 
+def sample_tokens(logits, key, *, temperature: float, greedy: bool,
+                  done=None, pad_id: int = 0):
+    """THE sampling arithmetic — every generation engine (sync rollout and
+    serve.ServingEngine) must route through here: the serving engine's
+    bit-compatibility contract with this engine holds only while the two
+    sample identically.  Returns (next_token int32, its logp)."""
+    logits = logits / max(temperature, 1e-6)
+    logp_all = jax.nn.log_softmax(logits, axis=-1)
+    if greedy:
+        nxt = jnp.argmax(logits, axis=-1)
+    else:
+        nxt = jax.random.categorical(key, logits, axis=-1)
+    lp = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
+    if done is not None:
+        nxt = jnp.where(done, pad_id, nxt)
+        lp = jnp.where(done, 0.0, lp)
+    return nxt.astype(jnp.int32), lp
+
+
 class RolloutEngine:
     def __init__(self, cfg: ModelConfig, *, max_new: int, eos_id: int,
                  pad_id: int, temperature: float = 1.0, greedy: bool = False):
@@ -47,17 +66,11 @@ class RolloutEngine:
 
     def _step_impl(self, params, cache, tok, pos, key, done):
         logits, cache = self.model.decode(params, self.cfg, cache, tok, pos)
-        logits = logits / max(self.temperature, 1e-6)
-        logp_all = jax.nn.log_softmax(logits, axis=-1)
-        if self.greedy:
-            nxt = jnp.argmax(logits, axis=-1)
-        else:
-            nxt = jax.random.categorical(key, logits, axis=-1)
-        lp = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
-        nxt = jnp.where(done, self.pad_id, nxt)
-        lp = jnp.where(done, 0.0, lp)
+        nxt, lp = sample_tokens(logits, key, temperature=self.temperature,
+                                greedy=self.greedy, done=done,
+                                pad_id=self.pad_id)
         done = done | (nxt == self.eos_id)
-        return cache, nxt.astype(jnp.int32), lp, done
+        return cache, nxt, lp, done
 
     # -- public API ---------------------------------------------------------
     def generate(self, params, prompts: np.ndarray, key,
@@ -72,18 +85,12 @@ class RolloutEngine:
             batch.update(extras)
         logits, cache = self._prefill(params, batch, cache)
 
-        logits = logits / max(self.temperature, 1e-6)
-        logp_all = jax.nn.log_softmax(logits, axis=-1)
         key, k0 = jax.random.split(key)
-        if self.greedy:
-            tok = jnp.argmax(logits, axis=-1)
-        else:
-            tok = jax.random.categorical(k0, logits, axis=-1)
-        lp = jnp.take_along_axis(logp_all, tok[:, None], axis=-1)[:, 0]
+        tok, lp = sample_tokens(logits, k0, temperature=self.temperature,
+                                greedy=self.greedy)
         done = tok == self.eos_id
         toks = [np.asarray(tok, np.int32)]
         lps = [np.asarray(lp, np.float32)]
-        tok = tok.astype(jnp.int32)
 
         for t in range(1, self.max_new):
             key, k = jax.random.split(key)

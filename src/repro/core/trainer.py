@@ -25,6 +25,7 @@ from repro.core.transfer_dock import (CentralReplayBuffer, DispatchLedger,
 from repro.core.workers import ActorWorker, ReferenceWorker, RewardWorker
 from repro.data.prompts import PromptDataset
 from repro.data.tokenizer import ByteTokenizer
+from repro.launch.mesh import make_local_mesh
 from repro.models.model import build_model
 from repro.optim import adamw_init
 from repro.sharding import param_specs
@@ -67,9 +68,7 @@ class GRPOTrainer:
                                   donate_argnums=(0, 1))
 
         # --- distribution -----------------------------------------------
-        self.mesh = mesh or jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        self.mesh = mesh or make_local_mesh()
         tspecs = param_specs(cfg, self.params, self.mesh, stage="train")
         gspecs = param_specs(cfg, self.params, self.mesh, stage="gen",
                              gen_mode="tp")
@@ -121,10 +120,26 @@ class GRPOTrainer:
         pbatch = self.dock.get("actor_generation", "prompt", ready,
                                dst_node=self.actor.node)
         self.key, k = jax.random.split(self.key)
-        rollout = self.actor.generate(gen_params, pbatch, k)
-        self.dock.put("tokens", ready, rollout.tokens, src_node=self.actor.node)
-        self.dock.put("response_mask", ready, rollout.response_mask,
-                      src_node=self.actor.node)
+        if self.actor.engine_kind == "serving":
+            # continuous batching: each finished sample flows into the dock
+            # the MOMENT its sequence completes, not at the batch barrier —
+            # downstream stages see readiness metadata per sample.
+            node = self.actor.node
+
+            def _stream(i, tokens_row, mask_row, length):
+                self.dock.put("tokens", [ready[i]], tokens_row[None],
+                              src_node=node)
+                self.dock.put("response_mask", [ready[i]], mask_row[None],
+                              src_node=node)
+
+            rollout = self.actor.generate(gen_params, pbatch, k,
+                                          on_finish=_stream)
+        else:
+            rollout = self.actor.generate(gen_params, pbatch, k)
+            self.dock.put("tokens", ready, rollout.tokens,
+                          src_node=self.actor.node)
+            self.dock.put("response_mask", ready, rollout.response_mask,
+                          src_node=self.actor.node)
         self.dock.mark_consumed("actor_generation", ready)
         gen_time = time.perf_counter() - t0
         del gen_params

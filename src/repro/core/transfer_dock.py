@@ -147,7 +147,17 @@ class TransferDock:
         rows = []
         for idx in idxs:
             wh = self._wh(int(idx))
-            row = wh.get(fld, int(idx))
+            try:
+                row = wh.get(fld, int(idx))
+            except KeyError:
+                have = sorted(wh.store.get(fld, {}))
+                raise KeyError(
+                    f"transfer dock: field {fld!r} not ready for sample "
+                    f"{int(idx)} (requested by worker state {state!r}; "
+                    f"warehouse {wh.node} holds {fld!r} for samples "
+                    f"{have[:8]}{'…' if len(have) > 8 else ''}). "
+                    f"Did the producing stage run / mark this sample?"
+                ) from None
             self.ledger.record(row.nbytes, cross=wh.node != dst_node,
                                node=wh.node)
             rows.append(row)

@@ -21,14 +21,27 @@ class ActorWorker:
     """Owns the policy weights; generation/inference/update states."""
 
     def __init__(self, cfg: ModelConfig, rl: RLConfig, *, eos_id: int,
-                 pad_id: int, node: int = 0):
+                 pad_id: int, node: int = 0, engine: str | None = None):
         self.cfg = cfg
         self.rl = rl
         self.node = node
         self.model = build_model(cfg)
-        self.engine = RolloutEngine(
-            cfg, max_new=rl.max_response_len, eos_id=eos_id, pad_id=pad_id,
-            temperature=rl.temperature)
+        self.engine_kind = engine or getattr(rl, "rollout_engine", "sync")
+        if self.engine_kind == "serving":
+            from repro.serve.engine import ServingEngine
+
+            self.engine = ServingEngine(
+                cfg, max_new=rl.max_response_len, eos_id=eos_id,
+                pad_id=pad_id, temperature=rl.temperature,
+                max_slots=rl.serve_max_slots,
+                block_size=rl.serve_block_size)
+        elif self.engine_kind == "sync":
+            self.engine = RolloutEngine(
+                cfg, max_new=rl.max_response_len, eos_id=eos_id,
+                pad_id=pad_id, temperature=rl.temperature)
+        else:
+            raise ValueError(f"unknown rollout engine {self.engine_kind!r}; "
+                             f"expected 'sync' or 'serving'")
         self._infer = jax.jit(self._infer_impl)
 
     def _infer_impl(self, params, batch):
@@ -36,7 +49,14 @@ class ActorWorker:
         return token_logprobs(logits, batch["tokens"])
 
     # generation state --------------------------------------------------------
-    def generate(self, gen_params, prompts: np.ndarray, key, extras=None):
+    def generate(self, gen_params, prompts: np.ndarray, key, extras=None,
+                 on_finish=None):
+        """on_finish(i, tokens_row, mask_row, length) streams each finished
+        sample (serving engine only; the synchronized engine has no
+        per-sample completion events — rows arrive at the batch barrier)."""
+        if self.engine_kind == "serving":
+            return self.engine.generate(gen_params, prompts, key, extras,
+                                        on_finish=on_finish)
         return self.engine.generate(gen_params, prompts, key, extras)
 
     # inference state ---------------------------------------------------------

@@ -22,7 +22,7 @@ import jax           # noqa: E402
 
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES  # noqa: E402
 from repro.launch import analysis  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.mesh import make_mesh, make_production_mesh  # noqa: E402
 from repro.launch.specs import SkipPair, build_program, reshard_program  # noqa: E402
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -140,8 +140,7 @@ def run_pipeline_demo(arch: str = "yi-6b", microbatches: int = 8,
     from repro.sharding.pipeline import pipeline_forward
 
     cfg = get_config(arch)
-    mesh = jax.make_mesh((4, 8, 8), ("pipe", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((4, 8, 8), ("pipe", "data", "model"))
     pstruct = params_structs(cfg)
     b, s = 32, 4096
     mb = b // microbatches

@@ -3,23 +3,46 @@
 Single pod:  (16, 16)    over ("data", "model")        — 256 chips.
 Multi-pod:   (2, 16, 16) over ("pod", "data", "model") — 512 chips.
 
-A FUNCTION (not a module constant) so importing this module never touches
+FUNCTIONS (not module constants) so importing this module never touches
 jax device state — only ``dryrun.py`` sets the 512-host-device XLA flag.
+
+``make_mesh`` is the ONE version-tolerant constructor: newer jax exposes
+``jax.sharding.AxisType`` and accepts ``axis_types=``; jax 0.4.x does not
+(meshes are implicitly Auto there), so we feature-detect once and every
+call site in src/, examples/, benchmarks/ and tests/ goes through here.
 """
 from __future__ import annotations
 
 import jax
 
 
+def make_mesh(shape, axes):
+    """Version-tolerant ``jax.make_mesh`` with Auto axis types everywhere
+    the installed jax supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def make_abstract_mesh(shape, axes):
+    """Version-tolerant ``jax.sharding.AbstractMesh`` (device-free mesh for
+    sharding rules).  Newer jax: ``AbstractMesh(shape, axes, axis_types=…)``;
+    jax 0.4.x: ``AbstractMesh(((name, size), …))``."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.sharding.AbstractMesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """1-device mesh with the production axis names (CPU examples/tests)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))

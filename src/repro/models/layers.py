@@ -115,14 +115,21 @@ def attn_prefill(p: dict, cfg: ModelConfig, x: jnp.ndarray, cos, sin,
 def attn_decode(p: dict, cfg: ModelConfig, x1: jnp.ndarray, cos1, sin1,
                 k_cache, v_cache, slot: jnp.ndarray, valid: jnp.ndarray):
     """One-token decode.  x1: (B, 1, d); k_cache/v_cache: (B, S, KV, hd);
-    slot: () int32 — the cache slot to write (ring-buffered by the caller);
+    slot: () int32 — the cache slot to write (ring-buffered by the caller) —
+    or (B,) int32 for per-sequence slots (continuous-batching serving, where
+    every sequence sits at its own depth);
     valid: (B, S) bool — live cache slots AFTER insertion."""
     q, k, v = _qkv(p, cfg, x1)
     if cos1 is not None:
         q = ops.apply_rope(q, cos1[:, :, None, :], sin1[:, :, None, :])
         k = ops.apply_rope(k, cos1[:, :, None, :], sin1[:, :, None, :])
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    if jnp.ndim(slot) == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    else:
+        rows = jnp.arange(k_cache.shape[0])
+        k_cache = k_cache.at[rows, slot].set(k[:, 0])
+        v_cache = v_cache.at[rows, slot].set(v[:, 0])
     y = ops.decode_attention(q, k_cache, v_cache, valid)
     return attn_project_out(p, y), k_cache, v_cache
 

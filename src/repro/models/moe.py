@@ -228,13 +228,8 @@ def decode(params: dict, cfg: ModelConfig, cache: dict, tokens: jnp.ndarray,
     x = L.embed_tokens(params, cfg, tokens)
     b = x.shape[0]
     cap = cache["k"].shape[2]
-    cos, sin = L.rope_for(cfg, T._positions(cfg, b, 1, offset=pos))
-    slot = jax.lax.rem(pos, cap)
-    ar = jnp.arange(cap)
-    valid = ar <= pos
-    if cfg.sliding_window > 0 and cap > cfg.sliding_window:
-        valid &= ar > pos - cfg.sliding_window
-    valid = jnp.broadcast_to(valid[None], (b, cap))
+    offset, slot, valid = T._decode_pos_valid(cfg, pos, b, cap)
+    cos, sin = L.rope_for(cfg, T._positions(cfg, b, 1, offset=offset))
 
     def body(h, xs):
         lp, kc, vc = xs

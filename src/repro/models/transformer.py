@@ -59,6 +59,22 @@ def _rope(cfg: ModelConfig, positions):
     return L.rope_for(cfg, positions)
 
 
+def _decode_pos_valid(cfg: ModelConfig, pos, b: int, cap: int):
+    """Normalize a decode position — () shared by the batch (synchronized
+    rollout) or (B,) per-sequence (continuous-batching serving) — into
+    (offset for _positions, write slot, (B, cap) validity mask)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    offset = pos if pos.ndim == 0 else pos[:, None]
+    slot = jax.lax.rem(pos, cap)
+    ar = jnp.arange(cap)
+    pcol = pos if pos.ndim == 0 else pos[:, None]
+    valid = ar <= pcol  # ring overwrite keeps this exact for cap == window
+    if cfg.sliding_window > 0 and cap > cfg.sliding_window:
+        valid &= ar > pcol - cfg.sliding_window
+    valid = jnp.broadcast_to(valid if pos.ndim else valid[None], (b, cap))
+    return offset, slot, valid
+
+
 # ---------------------------------------------------------------------------
 # layer body
 # ---------------------------------------------------------------------------
@@ -145,19 +161,14 @@ def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
 def decode(params: dict, cfg: ModelConfig, cache: dict, tokens: jnp.ndarray,
            pos: jnp.ndarray):
     """One decode step.  tokens: (B, 1); pos: () int32 — absolute position of
-    the incoming token (same for the whole batch; synchronized RL rollout).
+    the incoming token (same for the whole batch; synchronized RL rollout) —
+    or (B,) int32 per-sequence positions (continuous-batching serving).
     """
     x = L.embed_tokens(params, cfg, tokens)
     b = x.shape[0]
     cap = cache["k"].shape[2]
-    positions = _positions(cfg, b, 1, offset=pos)
-    cos, sin = _rope(cfg, positions)
-    slot = jax.lax.rem(pos, cap)
-    ar = jnp.arange(cap)
-    valid = ar <= pos  # ring overwrite keeps this exact for cap == window
-    if cfg.sliding_window > 0 and cap > cfg.sliding_window:
-        valid &= ar > pos - cfg.sliding_window
-    valid = jnp.broadcast_to(valid[None], (b, cap))
+    offset, slot, valid = _decode_pos_valid(cfg, pos, b, cap)
+    cos, sin = _rope(cfg, _positions(cfg, b, 1, offset=offset))
 
     def body(h, xs):
         lp, kc, vc = xs

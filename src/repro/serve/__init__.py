@@ -1,0 +1,14 @@
+"""Continuous-batching serving subsystem (the vLLM-Ascend analogue).
+
+  * ``paged_cache``  — block-table paged KV cache over the model zoo's
+    ``init_cache/prefill/decode`` API, with a Pallas gather kernel for block
+    reads and a pure-JAX reference path.
+  * ``scheduler``    — request queue: admission, slot assignment, EOS-driven
+    eviction and refill, and recompute-preemption when blocks run out.
+  * ``engine``       — ``ServingEngine``: online ``submit/step/drain`` plus a
+    ``generate()`` batch API that is a drop-in for ``core.rollout``'s
+    ``RolloutEngine``.
+"""
+from repro.serve.engine import RequestOutput, ServingEngine  # noqa: F401
+from repro.serve.paged_cache import PagedKVCache  # noqa: F401
+from repro.serve.scheduler import OutOfBlocksError, Request, Scheduler  # noqa: F401

@@ -1,0 +1,319 @@
+"""ServingEngine — request-level continuous batching over the paged KV cache.
+
+Two APIs over one machinery:
+
+  * online  — ``submit(prompt)`` / ``step(params)`` / ``drain(params)``: a
+    request loop.  Each ``step`` admits whatever fits (prefill + KV inject),
+    runs ONE fused decode step over the whole slot batch, and evicts finished
+    sequences immediately — freed slots refill next step, so short requests
+    never wait for long ones.
+  * batch   — ``generate(params, prompts, key)``: drop-in for
+    ``core.rollout.RolloutEngine.generate``.  All prompts are prefilled in a
+    single jitted call (bit-identical to the synchronized engine) and their
+    KV rows injected at admission; with ``max_slots >= B`` and a block-aligned
+    capacity the outputs are BIT-compatible with ``RolloutEngine`` under
+    greedy decoding (tested).  ``on_finish`` streams each sample out the
+    moment it completes — the trainer uses it to push finished rollouts into
+    the transfer dock before the batch barrier.
+
+The decode batch is always the full ``(max_slots,)`` slot vector: idle slots
+carry the pad token, position 0, and a block table pointing at the null
+block, so jitted shapes never change and no recompilation happens as
+sequences come and go.  Per-slot depths ride the model zoo's vector-``pos``
+decode path (models/transformer.py, models/moe.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.rollout import RolloutResult, sample_tokens
+from repro.models.model import build_model
+from repro.serve.paged_cache import (PagedKVCache, blocks_for, gather_kv,
+                                     scatter_prefill, scatter_token)
+from repro.serve.scheduler import Request, Scheduler
+
+
+@dataclass
+class RequestOutput:
+    rid: int
+    prompt: np.ndarray       # (P,)  int32
+    gen: np.ndarray          # (n,)  int32 — generated tokens, EOS inclusive
+    gen_logp: np.ndarray     # (n,)  float32 — engine-side logp per token
+    latency_s: float         # submit -> finish
+    ttft_s: float            # submit -> first token (prefill)
+    preemptions: int
+
+    @property
+    def tokens(self) -> np.ndarray:
+        return np.concatenate([self.prompt, self.gen])
+
+
+class ServingEngine:
+    """Continuous-batching generation engine (the vLLM-Ascend analogue)."""
+
+    def __init__(self, cfg: ModelConfig, *, max_new: int, eos_id: int,
+                 pad_id: int, temperature: float = 1.0, greedy: bool = False,
+                 max_slots: int = 8, block_size: int = 16,
+                 max_seq_len: int | None = None, num_blocks: int | None = None,
+                 seed: int = 0):
+        if cfg.arch_type not in ("dense", "moe"):
+            # ssm/hybrid cache recurrent state (nothing to page); vlm would
+            # need per-request vision_embeds carried through preemption
+            # refills (ROADMAP) — silently re-prefilling without them would
+            # corrupt the vision-prefix KV, so refuse up front.
+            raise ValueError(
+                f"serving needs the paged {{k,v}} attention cache; arch "
+                f"{cfg.name!r} ({cfg.arch_type}) is not servable — "
+                f"use the synchronized RolloutEngine for it")
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.max_new = max_new
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.temperature = temperature
+        self.greedy = greedy
+        self.max_slots = max_slots
+        self.block_size = block_size
+        self._num_blocks_req = num_blocks
+        self.cache: PagedKVCache | None = None
+        self.sched: Scheduler | None = None
+        self._key = jax.random.PRNGKey(seed)
+        self._next_rid = 0
+        self._on_finish = None
+        self.steps = 0                      # fused decode steps run
+        if max_seq_len is not None:
+            self._ensure_state(max_seq_len)
+        self._prefill = jax.jit(self._prefill_impl)
+        self._sample = jax.jit(self._sample_impl)
+        self._step = jax.jit(self._step_impl, donate_argnums=(1, 2))
+        self._write = jax.jit(scatter_prefill, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    # state
+    # ------------------------------------------------------------------
+    def _ensure_state(self, max_seq: int) -> None:
+        mb = blocks_for(max_seq, self.block_size)
+        if self.cache is not None:
+            if self.cache.max_blocks_per_seq >= mb:
+                return
+            if not self.sched.idle:
+                raise RuntimeError(
+                    f"request needs {mb} blocks/seq but the pool was sized "
+                    f"for {self.cache.max_blocks_per_seq}; construct the "
+                    f"engine with max_seq_len>= {max_seq} for mixed loads")
+        num_blocks = self._num_blocks_req or self.max_slots * mb
+        self.cache = PagedKVCache(self.cfg, num_blocks=num_blocks,
+                                  block_size=self.block_size,
+                                  max_blocks_per_seq=mb)
+        self.sched = Scheduler(self.cache, self.max_slots)
+
+    # ------------------------------------------------------------------
+    # jitted pieces
+    # ------------------------------------------------------------------
+    def _prefill_impl(self, params, batch):
+        b, s = batch["tokens"].shape
+        cache = self.model.init_cache(self.cfg, b, s)
+        return self.model.prefill(params, self.cfg, batch, cache)
+
+    def _sample_impl(self, logits, key):
+        """First-token sampling — shared arithmetic with RolloutEngine."""
+        return sample_tokens(logits, key, temperature=self.temperature,
+                             greedy=self.greedy)
+
+    def _step_impl(self, params, pool_k, pool_v, tables, tok, pos, done, key):
+        """One continuous-batching decode step over the full slot batch.
+
+        tables: (S, MB) int32; tok: (S, 1); pos: (S,) — per-slot write
+        position (= current cache length); done: (S,) True on idle slots."""
+        cache = gather_kv(pool_k, pool_v, tables, self.block_size)
+        logits, cache = self.model.decode(params, self.cfg, cache, tok, pos)
+        s = tables.shape[0]
+        rows = jnp.arange(s)
+        wk = cache["k"][:, rows, pos]               # (n, S, kv, hd)
+        wv = cache["v"][:, rows, pos]
+        flat = (tables[rows, pos // self.block_size] * self.block_size
+                + pos % self.block_size)            # (S,) — idle -> null block
+        pool_k = scatter_token(pool_k, wk, flat)
+        pool_v = scatter_token(pool_v, wv, flat)
+        nxt, lp = sample_tokens(logits, key, temperature=self.temperature,
+                                greedy=self.greedy, done=done,
+                                pad_id=self.pad_id)
+        return pool_k, pool_v, nxt, lp
+
+    # ------------------------------------------------------------------
+    # online API
+    # ------------------------------------------------------------------
+    def submit(self, prompt, *, max_new: int | None = None) -> int:
+        """Queue one request.  Returns its engine-assigned request id.
+
+        NOTE: admission prefill jit-compiles per distinct prompt length —
+        fine for a demo/few-length workload; a varied-length online server
+        wants masked bucketed prefill (ROADMAP) before this is cheap."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        max_new = self.max_new if max_new is None else max_new
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        self._ensure_state(len(prompt) + max_new)
+        rid = self._next_rid
+        self._next_rid += 1
+        self.sched.submit(Request(rid=rid, prompt=prompt, max_new=max_new))
+        return rid
+
+    def step(self, params) -> list[RequestOutput]:
+        """Admit what fits, run one fused decode step, evict what finished."""
+        finished: list[RequestOutput] = []
+        if self.sched is None:
+            return finished
+        self._admit(params, finished)
+        self.sched.ensure_capacity()
+        if not self.sched.running:
+            return finished
+        s = self.max_slots
+        tok = np.full((s, 1), self.pad_id, np.int32)
+        pos = np.zeros((s,), np.int32)
+        done = np.ones((s,), bool)
+        for slot, req in self.sched.running.items():
+            tok[slot, 0] = req.generated[-1]
+            pos[slot] = req.cache_len
+            done[slot] = False
+        self._key, k = jax.random.split(self._key)
+        pool_k, pool_v, nxt, lp = self._step(
+            params, self.cache.pool_k, self.cache.pool_v,
+            jnp.asarray(self.sched.tables), jnp.asarray(tok),
+            jnp.asarray(pos), jnp.asarray(done), k)
+        self.cache.pool_k, self.cache.pool_v = pool_k, pool_v
+        self.steps += 1
+        nxt = np.asarray(nxt)
+        lp = np.asarray(lp)
+        for slot in list(self.sched.running):
+            req = self.sched.running[slot]
+            req.cache_len += 1
+            req.generated.append(int(nxt[slot]))
+            req.gen_logp.append(float(lp[slot]))
+            if (req.generated[-1] == self.eos_id
+                    or len(req.generated) >= req.max_new):
+                self._finish(slot, finished)
+        return finished
+
+    def drain(self, params) -> list[RequestOutput]:
+        """Run steps until every queued request has finished."""
+        outs: list[RequestOutput] = []
+        while self.sched is not None and not self.sched.idle:
+            outs.extend(self.step(params))
+        return outs
+
+    # ------------------------------------------------------------------
+    # admission / eviction
+    # ------------------------------------------------------------------
+    def _admit(self, params, finished: list) -> None:
+        for req in self.sched.admit():
+            if req.stash is not None:
+                krows, vrows, tok0, lp0 = req.stash
+                req.stash = None
+            else:
+                toks = req.refill_tokens
+                logits, cache = self._prefill(
+                    params, {"tokens": jnp.asarray(toks[None])})
+                krows, vrows = cache["k"][:, 0], cache["v"][:, 0]
+                self._key, k0 = jax.random.split(self._key)
+                t0, l0 = self._sample(logits, k0)
+                tok0, lp0 = int(t0[0]), float(l0[0])
+            p = krows.shape[1]
+            tbl = self.sched.tables[req.slot]
+            j = np.arange(p)
+            flat = jnp.asarray(tbl[j // self.block_size] * self.block_size
+                               + j % self.block_size)
+            self.cache.pool_k = self._write(self.cache.pool_k, krows, flat)
+            self.cache.pool_v = self._write(self.cache.pool_v, vrows, flat)
+            req.cache_len = p
+            if req.first_token_at < 0:
+                req.first_token_at = time.perf_counter()
+            req.generated.append(tok0)
+            req.gen_logp.append(lp0)
+            if tok0 == self.eos_id or len(req.generated) >= req.max_new:
+                self._finish(req.slot, finished)
+
+    def _finish(self, slot: int, finished: list) -> None:
+        req = self.sched.finish(slot)
+        out = RequestOutput(
+            rid=req.rid, prompt=req.prompt,
+            gen=np.asarray(req.generated, np.int32),
+            gen_logp=np.asarray(req.gen_logp, np.float32),
+            latency_s=req.finished_at - req.submitted_at,
+            ttft_s=max(req.first_token_at - req.submitted_at, 0.0),
+            preemptions=req.preemptions)
+        finished.append(out)
+        if self._on_finish is not None:
+            self._on_finish(out)
+
+    # ------------------------------------------------------------------
+    # batch API — drop-in for RolloutEngine.generate
+    # ------------------------------------------------------------------
+    def generate(self, params, prompts: np.ndarray, key, extras=None,
+                 on_finish=None) -> RolloutResult:
+        """prompts: (B, PL) int32 padded.  Continuous-batching decode; each
+        finished sample is streamed to ``on_finish(i, tokens_row, mask_row,
+        length)`` the moment it completes (cap-width rows, dock-ready)."""
+        b, pl = prompts.shape
+        cap = pl + self.max_new
+        self._ensure_state(cap)
+        if not self.sched.idle:
+            raise RuntimeError("generate() needs an idle engine")
+        self._key = key
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extras:
+            batch.update(extras)
+        # ONE batched prefill for the whole wave — bit-identical numerics to
+        # RolloutEngine's prefill; rows are injected into the pool per slot
+        # at admission time, so refills never recompile.
+        logits, cache = self._prefill(params, batch)
+        self._key, k0 = jax.random.split(self._key)
+        tok0, lp0 = self._sample(logits, k0)
+        tok0, lp0 = np.asarray(tok0), np.asarray(lp0)
+
+        rows: dict[int, tuple] = {}
+
+        def sink(out: RequestOutput):
+            trow, mrow, n = self._assemble(out, pl, cap)
+            rows[out.rid] = (trow, mrow, n, out)
+            if on_finish is not None:
+                on_finish(out.rid, trow, mrow, n)
+
+        self._on_finish = sink
+        try:
+            for i in range(b):
+                req = Request(rid=i, prompt=np.asarray(prompts[i], np.int32),
+                              max_new=self.max_new)
+                req.stash = (cache["k"][:, i], cache["v"][:, i],
+                             int(tok0[i]), float(lp0[i]))
+                self.sched.submit(req)
+            self.drain(params)
+        finally:
+            self._on_finish = None
+
+        t = max(r[2] for r in rows.values())
+        tokens = np.stack([rows[i][0] for i in range(b)])
+        mask = np.stack([rows[i][1] for i in range(b)])
+        lengths = np.asarray([rows[i][2] for i in range(b)], np.int32)
+        gen_logp = np.zeros((b, t), np.float32)
+        for i in range(b):
+            out = rows[i][3]
+            gen_logp[i, :len(out.gen_logp)] = out.gen_logp
+        return RolloutResult(tokens=tokens, response_mask=mask,
+                             gen_logp=gen_logp, lengths=lengths)
+
+    def _assemble(self, out: RequestOutput, pl: int, cap: int):
+        """RolloutEngine-format row: prompt + gen, PAD after EOS."""
+        row = np.full((cap,), self.pad_id, np.int32)
+        row[:pl] = out.prompt[:pl]
+        n = len(out.gen)
+        row[pl:pl + n] = out.gen
+        mask = np.zeros((cap,), np.float32)
+        mask[pl:pl + n] = 1.0
+        return row, mask, n

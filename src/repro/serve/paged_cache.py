@@ -1,0 +1,177 @@
+"""Block-table paged KV cache (the serving-side memory manager).
+
+The synchronized ``RolloutEngine`` allocates a dense ``(B, capacity)`` cache:
+every sequence owns ``capacity`` slots for its whole life, which is exactly
+the KV memory waste the paper's allgather-swap work fights on the weight
+side.  Here KV lives in fixed-size BLOCKS:
+
+  pool_k / pool_v : (num_layers, (num_blocks + 1) * block_size, kv, hd)
+
+i.e. a flat row pool; block ``i`` owns rows ``[i*bs, (i+1)*bs)``.  The LAST
+block is the **null block**: unassigned block-table entries point there, so
+KV writes from idle serving slots land in it and reads of it are masked by
+the attention validity mask — no per-slot branching inside the jitted step.
+
+A slot's logical cache is described by one row of a block table
+``(max_slots, max_blocks_per_seq) int32``; logical position ``j`` lives at
+flat row ``table[j // bs] * bs + j % bs``.  ``gather_kv`` materializes the
+dense per-slot view the model-zoo ``decode`` consumes — on TPU through a
+Pallas kernel whose grid reads the block table as a scalar-prefetch operand
+(one DMA per block), off-TPU through a pure-JAX advanced-index reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+def blocks_for(ntokens: int, block_size: int) -> int:
+    return -(-ntokens // block_size)
+
+
+# ---------------------------------------------------------------------------
+# gather: pool rows -> dense per-slot view
+# ---------------------------------------------------------------------------
+
+def flat_indices(tables: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """tables: (S, MB) int32 -> flat pool row per (slot, logical pos):
+    (S, MB * block_size) int32."""
+    cap = tables.shape[1] * block_size
+    j = jnp.arange(cap, dtype=jnp.int32)
+    return tables[:, j // block_size] * block_size + j % block_size
+
+
+def gather_pool_ref(pool: jnp.ndarray, tables: jnp.ndarray,
+                    block_size: int) -> jnp.ndarray:
+    """pool: (n, R, kv, hd); tables: (S, MB) -> (n, S, MB*bs, kv, hd)."""
+    return pool[:, flat_indices(tables, block_size)]
+
+
+def _gather_block_kernel(tbl_ref, pool_ref, o_ref):
+    del tbl_ref  # consumed by the index maps (scalar prefetch)
+    o_ref[...] = pool_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def gather_pool_pallas(pool: jnp.ndarray, tables: jnp.ndarray,
+                       block_size: int, interpret: bool = False) -> jnp.ndarray:
+    """Pallas block-read kernel: grid (layer, slot, block); the block table is
+    a scalar-prefetch operand so each program DMAs exactly the pool block its
+    table entry names (vLLM's paged attention gather, at the memory level)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    n, rows, kv, hd = pool.shape
+    s, mb = tables.shape
+    k = kv * hd
+    pool4 = pool.reshape(n, rows // block_size, block_size, k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, s, mb),
+        in_specs=[pl.BlockSpec((1, 1, block_size, k),
+                               lambda l, i, j, tbl: (l, tbl[i, j], 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, block_size, k),
+                               lambda l, i, j, tbl: (l, i, j, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_block_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, s, mb * block_size, k), pool.dtype),
+        interpret=interpret,
+    )(tables, pool4)
+    return out.reshape(n, s, mb * block_size, kv, hd)
+
+
+def gather_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray, tables: jnp.ndarray,
+              block_size: int) -> dict:
+    """Dense {"k", "v"} view of the paged pools — the cache pytree the
+    model-zoo ``decode`` consumes.  Dispatches like kernels/ops.py: Pallas on
+    TPU (or REPRO_PALLAS=interpret), jnp reference elsewhere."""
+    if ops._use_pallas():
+        interp = not jax.default_backend() == "tpu"
+        return {"k": gather_pool_pallas(pool_k, tables, block_size, interp),
+                "v": gather_pool_pallas(pool_v, tables, block_size, interp)}
+    return {"k": gather_pool_ref(pool_k, tables, block_size),
+            "v": gather_pool_ref(pool_v, tables, block_size)}
+
+
+# ---------------------------------------------------------------------------
+# scatter: step / prefill writes into the pool
+# ---------------------------------------------------------------------------
+
+def scatter_token(pool: jnp.ndarray, rows: jnp.ndarray,
+                  flat_pos: jnp.ndarray) -> jnp.ndarray:
+    """Write one decode step's KV.  rows: (n, S, kv, hd); flat_pos: (S,) —
+    idle slots' tables route their write to the null block."""
+    return pool.at[:, flat_pos].set(rows)
+
+
+def scatter_prefill(pool: jnp.ndarray, rows: jnp.ndarray,
+                    flat_rows: jnp.ndarray) -> jnp.ndarray:
+    """Write one sequence's prefill KV.  rows: (n, P, kv, hd); flat_rows: (P,)."""
+    return pool.at[:, flat_rows].set(rows)
+
+
+# ---------------------------------------------------------------------------
+# the cache object (pool arrays + block allocator)
+# ---------------------------------------------------------------------------
+
+class PagedKVCache:
+    """Owns the block pools and the free list.  Layout-compatible with the
+    transformer-family dense cache: gathering a slot's blocks reproduces the
+    ``init_cache``/``prefill`` row content bit-for-bit, which is what makes
+    ``ServingEngine.generate`` bit-compatible with ``RolloutEngine``."""
+
+    def __init__(self, cfg: ModelConfig, *, num_blocks: int, block_size: int,
+                 max_blocks_per_seq: int):
+        if cfg.num_kv_heads <= 0:
+            raise ValueError(
+                f"paged KV cache needs an attention cache; arch "
+                f"{cfg.name!r} ({cfg.arch_type}) has no KV heads")
+        self.cfg = cfg
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.null_block = num_blocks          # last block = write sink
+        n, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+        rows = (num_blocks + 1) * block_size
+        dt = L.cdtype(cfg)
+        self.pool_k = jnp.zeros((n, rows, kv, hd), dt)
+        self.pool_v = jnp.zeros((n, rows, kv, hd), dt)
+        self._free = list(range(num_blocks))
+
+    # -- allocator ----------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            from repro.serve.scheduler import OutOfBlocksError
+
+            raise OutOfBlocksError(
+                f"KV pool exhausted ({self.num_blocks} blocks of "
+                f"{self.block_size} tokens)")
+        return self._free.pop(0)
+
+    def free(self, blocks) -> None:
+        for b in blocks:
+            assert 0 <= b < self.num_blocks and b not in self._free, b
+            self._free.append(b)
+
+    def reset(self) -> None:
+        self._free = list(range(self.num_blocks))
+        self.pool_k = jnp.zeros_like(self.pool_k)
+        self.pool_v = jnp.zeros_like(self.pool_v)
+
+    # -- views --------------------------------------------------------------
+    def dense_view(self, tables) -> dict:
+        """Dense {"k", "v"} cache for the given block tables (host or device)."""
+        return gather_kv(self.pool_k, self.pool_v,
+                         jnp.asarray(tables, jnp.int32), self.block_size)

@@ -1,0 +1,195 @@
+"""Continuous-batching request scheduler.
+
+Requests queue FIFO and are admitted into one of ``max_slots`` serving slots
+whenever a slot AND enough KV blocks for their prompt (+1 decode token) are
+free.  A finished sequence (EOS or per-request token budget) is evicted the
+moment it completes and its slot refilled from the queue — no batch barrier,
+which is the whole point versus the synchronized ``RolloutEngine``.
+
+When a running sequence needs a new block and the pool is dry, the scheduler
+preempts the YOUNGEST running request (vLLM's recompute preemption): its
+blocks are released, and the request re-queues at the FRONT with its
+generated-so-far tokens folded into the prompt, to be re-prefilled on
+re-admission — mirroring how ``core/partial.py`` resumes partial rollouts
+under the then-current weights.
+
+The scheduler is pure host-side bookkeeping (numpy block tables, python
+queues); the engine owns all device work.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serve.paged_cache import PagedKVCache, blocks_for
+
+
+class OutOfBlocksError(RuntimeError):
+    """KV pool exhausted and no preemption victim available."""
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (P,) int32 — original prompt
+    max_new: int
+    submitted_at: float = field(default_factory=time.perf_counter)
+    # -- runtime state (scheduler/engine owned) -----------------------------
+    generated: list = field(default_factory=list)    # sampled token ids
+    gen_logp: list = field(default_factory=list)
+    slot: int = -1
+    cache_len: int = 0                 # KV rows currently in the paged cache
+    preemptions: int = 0
+    first_token_at: float = -1.0
+    finished_at: float = -1.0
+    # prefill stash: (k, v) rows (n, P, kv, hd) + presampled first token —
+    # set by the batch generate() path, which prefills all prompts in ONE
+    # jitted call (bit-identical to RolloutEngine's prefill) and injects the
+    # rows at admission time instead of re-running prefill per slot.
+    stash: tuple | None = None
+
+    @property
+    def refill_tokens(self) -> np.ndarray:
+        """Tokens to prefill on (re-)admission: prompt + generated so far."""
+        if not self.generated:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)])
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt) + self.max_new
+
+
+class Scheduler:
+    """Slot + block bookkeeping for the serving engine."""
+
+    def __init__(self, cache: PagedKVCache, max_slots: int):
+        self.cache = cache
+        self.max_slots = max_slots
+        self.block_size = cache.block_size
+        self.max_blocks = cache.max_blocks_per_seq
+        self.waiting: deque[Request] = deque()
+        self.running: dict[int, Request] = {}
+        self.tables = np.full((max_slots, self.max_blocks), cache.null_block,
+                              np.int32)
+        self._free_slots = list(range(max_slots))
+        self._blocks: dict[int, list[int]] = {s: [] for s in range(max_slots)}
+        self._admit_order: list[int] = []   # running slots, oldest first
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        need = blocks_for(req.total_len, self.block_size)
+        if need > self.max_blocks:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new} needs {need} blocks > max_blocks_per_seq "
+                f"{self.max_blocks}")
+        if need > self.cache.num_blocks:
+            raise ValueError(
+                f"request {req.rid} needs {need} blocks but the pool only "
+                f"has {self.cache.num_blocks}; it could never be scheduled")
+        self.waiting.append(req)
+
+    @property
+    def num_pending(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def num_running(self) -> int:
+        return len(self.running)
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and not self.running
+
+    # -- admission ----------------------------------------------------------
+    def admit(self) -> list[Request]:
+        """Move queued requests into free slots while both a slot and enough
+        blocks for their prefill (+1 decode write) exist.  FIFO — the head
+        blocks the queue (no head-of-line skipping, keeps latency fair)."""
+        admitted = []
+        while self.waiting and self._free_slots:
+            req = self.waiting[0]
+            need = blocks_for(len(req.refill_tokens) + 1, self.block_size)
+            if self.cache.num_free < need:
+                break
+            self.waiting.popleft()
+            slot = self._free_slots.pop(0)
+            blocks = [self.cache.alloc() for _ in range(need)]
+            self._blocks[slot] = blocks
+            self.tables[slot, :] = self.cache.null_block
+            self.tables[slot, :need] = blocks
+            req.slot = slot
+            req.cache_len = 0          # engine sets it after the KV write
+            self.running[slot] = req
+            self._admit_order.append(slot)
+            admitted.append(req)
+        return admitted
+
+    # -- growth / preemption ------------------------------------------------
+    def ensure_capacity(self) -> list[Request]:
+        """Guarantee every running slot owns a block for its next KV write.
+        Preempts (recompute-style) youngest-first when the pool runs dry.
+        Returns the preempted requests (already re-queued)."""
+        preempted: list[Request] = []
+        for slot in list(self._admit_order):
+            req = self.running.get(slot)
+            if req is None:
+                continue
+            need = blocks_for(req.cache_len + 1, self.block_size)
+            while len(self._blocks[slot]) < need:
+                if self.cache.num_free > 0:
+                    blk = self.cache.alloc()
+                    self.tables[slot, len(self._blocks[slot])] = blk
+                    self._blocks[slot].append(blk)
+                    continue
+                victim_slot = self._admit_order[-1]
+                victim = self._preempt(victim_slot)
+                preempted.append(victim)
+                if victim_slot == slot:
+                    break              # preempted ourselves; slot is gone
+        return preempted
+
+    def _preempt(self, slot: int) -> Request:
+        req = self.running[slot]
+        self._release(slot)
+        req.preemptions += 1
+        req.slot = -1
+        req.cache_len = 0
+        req.stash = None               # KV dropped -> recompute on readmission
+        self.waiting.appendleft(req)   # resume FIRST (cf. partial rollout)
+        return req
+
+    # -- eviction -----------------------------------------------------------
+    def finish(self, slot: int) -> Request:
+        req = self.running[slot]
+        self._release(slot)
+        req.finished_at = time.perf_counter()
+        return req
+
+    def _release(self, slot: int) -> None:
+        self.cache.free(self._blocks[slot])
+        self._blocks[slot] = []
+        self.tables[slot, :] = self.cache.null_block
+        del self.running[slot]
+        self._admit_order.remove(slot)
+        self._free_slots.append(slot)
+        self._free_slots.sort()
+
+    # -- debugging ----------------------------------------------------------
+    def check_invariants(self) -> None:
+        owned = [b for s in range(self.max_slots) for b in self._blocks[s]]
+        assert len(owned) == len(set(owned)), "block double-assignment"
+        assert not (set(owned) & set(self.cache._free)), "owned block in free list"
+        assert len(owned) + self.cache.num_free == self.cache.num_blocks, \
+            "block leak"
+        assert sorted(self.running) == sorted(self._admit_order)
+        for slot, req in self.running.items():
+            assert len(self._blocks[slot]) >= blocks_for(
+                max(req.cache_len, 1), self.block_size)
+            for j, b in enumerate(self._blocks[slot]):
+                assert self.tables[slot, j] == b

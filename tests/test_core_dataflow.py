@@ -8,6 +8,7 @@ from repro.core.resharding import Resharder, per_device_bytes, tree_device_bytes
 from repro.core.transfer_dock import (CentralReplayBuffer, DispatchLedger,
                                       TransferDock, cv_gb, dispatch_time_s,
                                       tcv_gb, tcv_td_gb)
+from repro.launch.mesh import make_mesh
 from jax.sharding import PartitionSpec as P
 
 STATES = {"actor_generation": 0, "actor_inference": 0, "ref_inference": 1,
@@ -89,8 +90,7 @@ def test_cv_monotone_in_load():
 # ---------------------------------------------------------------------------
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _tiny_params(key):
@@ -153,7 +153,6 @@ def test_naive_keeps_redundant_memory(rng):
 
 
 def test_per_device_bytes_uneven_padding():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     leaf = jax.ShapeDtypeStruct((10, 7), jnp.float32)
     assert per_device_bytes(leaf, P(None, None), mesh) == 280

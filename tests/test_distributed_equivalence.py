@@ -17,6 +17,7 @@ jax.config.update("jax_default_matmul_precision", "highest")
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_smoke_config
 from repro.configs.base import RLConfig
+from repro.launch.mesh import make_mesh
 from repro.core import grpo
 from repro.models.model import build_model
 from repro.optim import adamw_init
@@ -33,8 +34,7 @@ for arch in ("yi-6b", "mixtral-8x7b", "mamba2-1.3b"):
     logits1, _ = jax.jit(lambda p, b: m.forward(p, cfg, b))(params, batch)
 
     # 8-device mesh (2 data x 4 model), full sharding rules + constraints
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     specs = param_specs(cfg, params, mesh, stage="train")
     shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                              is_leaf=lambda x: isinstance(x, P))

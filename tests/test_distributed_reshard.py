@@ -14,14 +14,14 @@ import jax, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_smoke_config
 from repro.core.resharding import Resharder
+from repro.launch.mesh import make_mesh
 from repro.models.model import build_model
 from repro.sharding import param_specs
 
 cfg = get_smoke_config("mixtral-8x7b").replace(dtype="float32", remat=False)
 m = build_model(cfg)
 params = m.init(cfg, jax.random.PRNGKey(0))
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 t = param_specs(cfg, params, mesh, stage="train")
 g = param_specs(cfg, params, mesh, stage="gen", gen_mode="tp")
 tsh = jax.tree.map(lambda s: NamedSharding(mesh, s), t,

@@ -11,9 +11,10 @@ import sys, json
 sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
 jax.config.update("jax_default_matmul_precision", "highest")
+from repro.launch.mesh import make_mesh
 from repro.sharding.pipeline import pipeline_forward, sequential_forward
 
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("pipe",))
 L, d, B, S = 8, 32, 16, 8
 key = jax.random.PRNGKey(0)
 params = {"w": jax.random.normal(key, (L, d, d)) / np.sqrt(d),
@@ -38,7 +39,7 @@ err_g = max(float(np.max(np.abs(np.asarray(g1[k]) - np.asarray(g2[k]))))
 from repro.configs import get_smoke_config
 from repro.models import transformer as T
 from repro.models import layers as Lx
-mesh2 = jax.make_mesh((2,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh2 = make_mesh((2,), ("pipe",))
 cfg = get_smoke_config("yi-6b").replace(dtype="float32", remat=False)
 m_params = T.init(cfg, jax.random.PRNGKey(3))
 b, s = 4, 16

@@ -14,6 +14,7 @@ from repro.configs.base import RLConfig
 from repro.core.rollout import RolloutEngine
 from repro.data.prompts import PromptDataset, arithmetic_task, pattern_task
 from repro.data.tokenizer import ByteTokenizer
+from repro.launch.mesh import make_abstract_mesh
 from repro.models.model import build_model
 from repro.optim import (adamw_init, adamw_update, cosine_schedule,
                          global_norm, wsd_schedule)
@@ -156,9 +157,7 @@ def test_rollout_greedy_deterministic(rng):
 
 def _mesh(shape=(2, 4)):
     # AbstractMesh: the sharding RULES only need shapes/names, not devices
-    return jax.sharding.AbstractMesh(
-        shape, ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_abstract_mesh(shape, ("data", "model"))
 
 
 def test_param_specs_divisibility(rng):
