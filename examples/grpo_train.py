@@ -30,6 +30,7 @@ def main():
                   kl_coef=1e-3, temperature=1.0)
     ds = PromptDataset(pattern_task(), max_prompt_len=12, seed=0)
     tr = GRPOTrainer(CFG, rl, ds, num_nodes=4, seed=0, microbatch=64)
+    print(tr.graph.describe(), "\n")
 
     log, best = [], 0.0
     for it in range(args.iterations):

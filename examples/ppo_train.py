@@ -25,6 +25,7 @@ def main():
                   kl_coef=1e-3, gae_lambda=0.95)
     ds = PromptDataset(pattern_task(), max_prompt_len=12, seed=0)
     tr = PPOTrainer(CFG, rl, ds, pf_filter=args.pf, num_nodes=4, seed=0)
+    print(tr.graph.describe(), "\n")
 
     rewards = []
     for it in range(args.iterations):

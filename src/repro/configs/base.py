@@ -111,6 +111,7 @@ class RLConfig:
     gamma: float = 1.0
     gae_lambda: float = 0.95
     temperature: float = 1.0
+    greedy: bool = False             # argmax decoding (bit-reproducible runs)
     max_prompt_len: int = 64
     max_response_len: int = 64
     # --- optimizer ---

@@ -1,10 +1,18 @@
 # The paper's primary contribution: distributed dataflow for RL training —
-# the transfer dock (sample flow) + allgather-swap (resharding flow), plus
-# the GRPO/PPO trainers and the generation engine that they orchestrate.
+# the transfer dock (sample flow) + allgather-swap (resharding flow), and
+# the first-class dataflow-graph API (RLGraph + GraphExecutor) that the
+# GRPO/PPO/partial-rollout algorithm declarations run on.
 from repro.core import grpo, ppo  # noqa: F401
+from repro.core.graph import (  # noqa: F401
+    GraphExecutor,
+    RLGraph,
+    StageNode,
+    complete_groups,
+    derive_nodes,
+)
 from repro.core.resharding import Resharder, naive_reshard  # noqa: F401
 from repro.core.rollout import RolloutEngine  # noqa: F401
-from repro.core.trainer import GRPOTrainer  # noqa: F401
+from repro.core.trainer import GRPOTrainer, build_grpo_graph  # noqa: F401
 from repro.core.transfer_dock import (  # noqa: F401
     CentralReplayBuffer,
     DispatchLedger,

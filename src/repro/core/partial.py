@@ -1,19 +1,20 @@
 """Partial rollout (paper Table 2) — long-tail generation split across
-iterations.
+iterations, declared as a graph over the SAME executor as GRPO/PPO.
 
-Each iteration the actor generates at most ``budget`` tokens per sequence.
-Sequences that emit EOS (or exhaust the total response cap) are FINISHED and
-flow to inference/update through the transfer dock; the rest are stashed in
-the dock as partials and resumed FIRST next iteration (re-prefilled under the
-then-current weights — the mild off-policy prefix that partial rollout
-accepts by design).  GRPO group advantages are computed per COMPLETE group
-only, so groups whose members span iterations simply wait in the warehouses —
-the dock's readiness metadata handles this for free, which is exactly the
-paper's argument for a dataflow-level scheduler.
+Each iteration the generation node emits at most ``budget`` tokens per
+sequence.  Sequences that hit EOS (or the total response cap) are FINISHED:
+the node streams their rows into the dock and marks only them consumed, so
+unfinished samples stay visible to the generation controller and resume
+FIRST next iteration (re-prefilled under the then-current weights — the
+mild off-policy prefix partial rollout accepts by design).  Downstream
+nodes are the ordinary GRPO stages running GREEDILY (``expected=None``):
+they fire on whatever finished, and the advantage node's ``complete_groups``
+gate holds samples back until their whole GRPO group is present — the
+dock's readiness metadata handles the cross-iteration wait for free, which
+is exactly the paper's argument for a dataflow-level scheduler.
 """
 from __future__ import annotations
 
-import time
 from collections import defaultdict
 
 import jax
@@ -21,63 +22,79 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import grpo
-from repro.core.trainer import GRPOTrainer, IterationStats
+from repro.core.graph import RLGraph, complete_groups, derive_nodes
+from repro.core.trainer import (GRPOTrainer, IterationStats,  # noqa: F401
+                                build_grpo_graph)
+
+
+def build_partial_graph(actor_node: int = 0, ref_node: int = 1,
+                        reward_node: int = 2) -> RLGraph:
+    """Partial rollout as a graph EDIT of GRPO: a budgeted resume-generation
+    node and a complete-group gate on the advantage node — not a trainer
+    fork."""
+    T = PartialRolloutTrainer
+    base = build_grpo_graph(actor_node, ref_node, reward_node)
+    return RLGraph("partial_rollout", derive_nodes(base, {
+        "actor_generation": dict(fn=T._stage_generate),
+        "advantages": dict(fn=T._stage_advantages,
+                           gate=lambda ctx, idxs: complete_groups(
+                               idxs, ctx.rl.num_generations)),
+    }))
 
 
 class PartialRolloutTrainer(GRPOTrainer):
+    clear_dock_each_iteration = False   # indices persist across iterations
+
     def __init__(self, *args, budget: int = 8, **kw):
-        super().__init__(*args, **kw)
         self.budget = budget
         self.partials: dict[int, dict] = {}   # idx -> {tokens, ngen}
         self._next_idx = 0
-        self._meta: dict[int, dict] = {}
-        self._group_rewards: dict[int, dict[int, float]] = defaultdict(dict)
+        self._metas: dict[int, dict] = {}
+        super().__init__(*args, **kw)
 
-    # -- helpers --------------------------------------------------------
-    def _finish(self, idx: int, tokens_row: np.ndarray, ngen: int, pl: int):
-        cap = pl + self.rl.max_response_len
-        row = np.full((cap,), self.tok.pad_id, np.int32)
-        row[:len(tokens_row)] = tokens_row[:cap]
-        mask = np.zeros((cap,), np.float32)
-        mask[pl:pl + ngen] = 1.0
-        self.dock.put("tokens", [idx], row[None], src_node=0)
-        self.dock.put("response_mask", [idx], mask[None], src_node=0)
+    def _build_graph(self) -> RLGraph:
+        return build_partial_graph(self.actor.node, self.ref.node,
+                                   self.reward.node)
 
-    # -- main loop ------------------------------------------------------
-    def iteration(self, global_batch: int) -> IterationStats:
-        cfg, rl = self.cfg, self.rl
-        G, N = global_batch, rl.num_generations
-        pl = rl.max_prompt_len
-
-        # enqueue fresh prompts (persistent indices across iterations)
+    # -- enqueue: fresh prompts get persistent indices --------------------
+    def _enqueue(self, global_batch: int) -> None:
+        G, N = global_batch, self.rl.num_generations
+        pl = self.rl.max_prompt_len
+        self._plen = pl
         prompts, _, metas = self.dataset.sample(G)
-        fresh = []
+        fresh, rows = [], []
         for i in range(G):
             for _ in range(N):
                 idx = self._next_idx
                 self._next_idx += 1
-                self._meta[idx] = metas[i]
+                self._metas[idx] = metas[i]
                 row = np.full((pl,), self.tok.pad_id, np.int32)
                 row[:] = prompts[i]
                 self.partials[idx] = {"tokens": row, "ngen": 0}
                 fresh.append(idx)
+                rows.append(row)
+        self.dock.put("prompt", fresh, np.stack(rows),
+                      src_node=self.actor.node)
+        return None        # greedy scheduling: stages run on what finishes
 
-        gen_params, stash, reshard_led = self.resharder.to_generation(
-            self.params)
-        del self.params
-
-        # ---- generation stage: resume buckets of equal prefix length ----
-        t0 = time.perf_counter()
+    # -- stage callables ---------------------------------------------------
+    def _stage_generate(self, io):
+        """Resume buckets of equal prefix length; ``io.idxs`` is every
+        pending partial (unfinished samples were never marked consumed, so
+        the controller keeps offering them)."""
+        rl = self.rl
+        pl = rl.max_prompt_len
+        cap = pl + rl.max_response_len
         buckets = defaultdict(list)
-        for idx, st in self.partials.items():
-            buckets[len(st["tokens"])].append(idx)
+        for idx in io.idxs:
+            buckets[len(self.partials[idx]["tokens"])].append(idx)
         finished = []
         for plen, idxs in sorted(buckets.items()):
             batch = np.stack([self.partials[i]["tokens"] for i in idxs])
             self.key, k = jax.random.split(self.key)
             eng = self.actor.engine
             eng.max_new = self.budget
-            roll = eng.generate(gen_params, batch, k)
+            roll = eng.generate(self.gen_params, batch, k)
             for j, idx in enumerate(idxs):
                 st = self.partials[idx]
                 n = int(roll.lengths[j])
@@ -85,77 +102,27 @@ class PartialRolloutTrainer(GRPOTrainer):
                 st["tokens"] = np.concatenate([st["tokens"], new_tokens])
                 st["ngen"] += n
                 hit_eos = bool((new_tokens == self.tok.eos_id).any())
-                done = hit_eos or st["ngen"] >= rl.max_response_len
-                if done:
-                    self._finish(idx, st["tokens"], st["ngen"], pl)
+                if hit_eos or st["ngen"] >= rl.max_response_len:
+                    row = np.full((cap,), self.tok.pad_id, np.int32)
+                    row[:len(st["tokens"])] = st["tokens"][:cap]
+                    mask = np.zeros((cap,), np.float32)
+                    mask[pl:pl + st["ngen"]] = 1.0
+                    io.put("tokens", [idx], row[None])
+                    io.put("response_mask", [idx], mask[None])
                     finished.append(idx)
                     del self.partials[idx]
-        gen_time = time.perf_counter() - t0
-        del gen_params
-        self.params, reshard_led = self.resharder.to_update(stash, reshard_led)
+        io.consumed = finished
+        return None
 
-        # ---- inference + reward on finished samples ---------------------
-        t0 = time.perf_counter()
-        rewards_seen = []
-        if finished:
-            toks = self.dock.get("actor_inference", "tokens", finished, 0)
-            old_logp = self.actor.old_logprobs(self.params, toks)
-            self.dock.put("old_logp", finished, old_logp, src_node=0)
-            ref_logp = self.ref.logprobs(toks)
-            self.dock.put("ref_logp", finished, ref_logp,
-                          src_node=self.ref.node)
-            rw = self.reward.score([self._meta[i] for i in finished], toks, pl)
-            rewards_seen = list(rw)
-            for idx, r in zip(finished, rw):
-                self._group_rewards[idx // N][idx] = float(r)
-
-        # advantages for COMPLETE groups only
-        ready_updates = []
-        for gid, members in list(self._group_rewards.items()):
-            if len(members) == N:
-                rs = np.array([members[i] for i in sorted(members)],
-                              np.float32)
-                adv = np.asarray(
-                    grpo.group_advantages(jnp.asarray(rs[None]))).reshape(-1)
-                idxs = sorted(members)
-                self.dock.put("advantages", idxs, adv[:, None], src_node=0)
-                ready_updates.extend(idxs)
-                del self._group_rewards[gid]
-        infer_time = time.perf_counter() - t0
-
-        # ---- update stage -----------------------------------------------
-        t0 = time.perf_counter()
-        losses, kls = [], []
-        if ready_updates:
-            sel = ready_updates
-            batch = {
-                "tokens": jnp.asarray(self.dock.get(
-                    "actor_update", "tokens", sel, 0)),
-                "response_mask": jnp.asarray(self.dock.get(
-                    "actor_update", "response_mask", sel, 0)),
-                "old_logp": jnp.asarray(self.dock.get(
-                    "actor_update", "old_logp", sel, 0)),
-                "ref_logp": jnp.asarray(self.dock.get(
-                    "actor_update", "ref_logp", sel, 0)),
-                "advantages": jnp.asarray(self.dock.get(
-                    "actor_update", "advantages", sel, 0))[:, 0],
-            }
-            self.params, self.opt_state, metrics = self.train_step(
-                self.params, self.opt_state, batch)
-            losses.append(float(metrics["loss"]))
-            kls.append(float(metrics["kl"]))
-            self.dock.mark_consumed("actor_update", sel)
-        update_time = time.perf_counter() - t0
-
-        return IterationStats(
-            reward_mean=float(np.mean(rewards_seen)) if rewards_seen else 0.0,
-            reward_std=float(np.std(rewards_seen)) if rewards_seen else 0.0,
-            loss=float(np.mean(losses)) if losses else 0.0,
-            kl=float(np.mean(kls)) if kls else 0.0,
-            gen_time=gen_time, infer_time=infer_time, update_time=update_time,
-            reshard=reshard_led.snapshot(),
-            dispatch=self.dock.ledger.snapshot(),
-        )
+    def _stage_advantages(self, io):
+        """Group z-scores over COMPLETE groups only (the gate guarantees
+        ``io.idxs`` is a union of whole groups, sorted)."""
+        N = self.rl.num_generations
+        rw = io.ins["rewards"][:, 0]
+        adv = np.asarray(
+            grpo.group_advantages(jnp.asarray(rw.reshape(-1, N)))
+        ).reshape(-1)
+        return {"advantages": adv[:, None]}
 
     @property
     def pending_partials(self) -> int:

@@ -1,34 +1,58 @@
-"""PPO trainer — actor-critic RLHF over the same MindSpeed-RL dataflow.
+"""PPO trainer — actor-critic RLHF declared over the same dataflow graph.
 
-Differences from GRPO (`trainer.py`): a value head on the actor trunk
-(critic), token-level KL-shaped rewards, GAE advantages, and the PPO clipped
-value loss.  PF-PPO (policy filtration) reweights rollouts by reward rank.
-The sample flow still moves through the transfer dock and the weights through
-the allgather-swap resharder — the dataflow layer is algorithm-agnostic,
-which is the point of the paper's architecture (Fig. 6).
+Differences from GRPO (`trainer.py`) are pure graph edits: the inference
+node also emits critic values, and the advantage node is token-level GAE
+over KL-shaped rewards (plus the PF-PPO rank filtration) instead of group
+z-scores.  The executor, dock and resharder are untouched — the dataflow
+layer is algorithm-agnostic, which is the point of the paper's
+architecture (Fig. 6): a new algorithm is a new ``RLGraph``, not a new
+trainer loop.  All sample movement routes through the dock's metadata
+plane (``request_metadata``/``mark_consumed``), so the dispatch ledger
+sees PPO traffic exactly like GRPO traffic.
 """
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, RLConfig
-from repro.core import grpo, ppo
+from repro.core import ppo
+from repro.core.graph import RLGraph, derive_nodes
 from repro.core.resharding import Resharder
-from repro.core.trainer import GRPOTrainer, IterationStats
-from repro.models.model import build_model
+from repro.core.trainer import GRPOTrainer, build_grpo_graph
 from repro.optim import adamw_init
+
+
+def build_ppo_graph(actor_node: int = 0, ref_node: int = 1,
+                    reward_node: int = 2) -> RLGraph:
+    """PPO as a graph EDIT of GRPO: the inference node also emits critic
+    values, the advantage node is GAE shaping, the update is the PPO step —
+    generation/ref/reward and the topology are inherited."""
+    T = PPOTrainer
+    base = build_grpo_graph(actor_node, ref_node, reward_node)
+    return RLGraph("ppo", derive_nodes(base, {
+        "actor_inference": dict(outputs=("old_logp", "values"),
+                                fn=T._stage_infer_values),
+        "advantages": dict(node=actor_node,
+                           inputs=("response_mask", "old_logp", "ref_logp",
+                                   "values", "rewards"),
+                           outputs=("advantages_tok", "returns",
+                                    "values_pad"),
+                           fn=T._stage_gae),
+        "actor_update": dict(inputs=("tokens", "response_mask", "old_logp",
+                                     "values_pad", "advantages_tok",
+                                     "returns"),
+                             fn=T._stage_ppo_update),
+    }))
 
 
 class PPOTrainer(GRPOTrainer):
     def __init__(self, cfg: ModelConfig, rl: RLConfig, dataset, *,
                  pf_filter: bool = False, **kw):
         rl = rl.replace(algorithm="ppo")
-        super().__init__(cfg, rl, dataset, **kw)
         self.pf = pf_filter
+        super().__init__(cfg, rl, dataset, **kw)
         key = jax.random.PRNGKey(kw.get("seed", 0) + 17)
         self.params = ppo.add_value_head(self.params, cfg, key)
         self.opt_state = adamw_init(self.params)
@@ -43,45 +67,44 @@ class PPOTrainer(GRPOTrainer):
         self.resharder = Resharder(self.mesh, tspecs, gspecs,
                                    use_swap=rl.use_allgather_swap)
 
+    def _build_graph(self) -> RLGraph:
+        return build_ppo_graph(self.actor.node, self.ref.node,
+                               self.reward.node)
+
     def _values_impl(self, params, batch):
         return ppo.value_forward(params, self.cfg, batch)
 
-    def iteration(self, global_batch: int) -> IterationStats:
-        cfg, rl = self.cfg, self.rl
+    # -- PPO samples one response per prompt (no group repeat) ------------
+    def _enqueue(self, global_batch: int) -> int:
         G = global_batch
-        self.dock.clear()
         prompts, plens, metas = self.dataset.sample(G)
-        pl = prompts.shape[1]
-        idxs = list(range(G))
-        self.dock.put("prompt", idxs, prompts, src_node=0)
+        self._plen = prompts.shape[1]
+        self._metas = dict(enumerate(metas))
+        self.dock.put("prompt", list(range(G)), prompts,
+                      src_node=self.actor.node)
+        return G
 
-        gen_params, stash, reshard_led = self.resharder.to_generation(
-            self.params)
-        del self.params
-
-        t0 = time.perf_counter()
-        ready = self.dock.request_metadata("actor_generation", ["prompt"])
-        pb = self.dock.get("actor_generation", "prompt", ready, dst_node=0)
-        self.key, k = jax.random.split(self.key)
-        roll = self.actor.generate(gen_params, pb, k)
-        self.dock.put("tokens", ready, roll.tokens, src_node=0)
-        self.dock.put("response_mask", ready, roll.response_mask, src_node=0)
-        self.dock.mark_consumed("actor_generation", ready)
-        gen_time = time.perf_counter() - t0
-        del gen_params
-        self.params, reshard_led = self.resharder.to_update(stash, reshard_led)
-
-        # inference stage: old logp, values, ref logp, rewards
-        t0 = time.perf_counter()
-        toks = self.dock.get("actor_inference", "tokens", idxs, dst_node=0)
-        mask = self.dock.get("actor_inference", "response_mask", idxs, 0)
-        batch = {"tokens": jnp.asarray(toks)}
+    # -- stage callables ---------------------------------------------------
+    def _stage_infer_values(self, io):
+        toks = io.ins["tokens"]
         old_logp = self.actor.old_logprobs(self.params, toks)
-        values = np.asarray(self._values(self.params, batch), np.float32)
-        ref_logp = self.ref.logprobs(toks)
-        rewards = self.reward.score(metas, toks, pl)
+        values = np.asarray(
+            self._values(self.params, {"tokens": jnp.asarray(toks)}),
+            np.float32)
+        return {"old_logp": old_logp, "values": values}
 
-        # token-level shaped rewards: -kl per token + terminal task reward
+    def _stage_gae(self, io):
+        """Token-level shaped rewards (-kl per token + terminal task reward)
+        -> GAE advantages/returns, optionally PF-PPO filtered."""
+        rl = self.rl
+        G = len(io.idxs)
+        mask = io.ins["response_mask"]
+        old_logp = io.ins["old_logp"]
+        ref_logp = io.ins["ref_logp"]
+        values = io.ins["values"]
+        rewards = io.ins["rewards"][:, 0]
+        self._it["rewards_arr"] = rewards
+
         kl = old_logp - ref_logp                           # (G, S-1)
         tok_rewards = -rl.kl_coef * kl
         m = mask[:, 1:]
@@ -94,30 +117,25 @@ class PPOTrainer(GRPOTrainer):
         if self.pf:
             w = np.asarray(ppo.pf_filter(jnp.asarray(rewards)))
             adv = adv * w[:, None]
-        pad = lambda a: np.concatenate(
+        pad = lambda a: np.concatenate(                    # noqa: E731
             [np.zeros((G, 1), np.float32), a], axis=1)
-        infer_time = time.perf_counter() - t0
+        self._it["kl_stat"] = float(np.mean(np.abs(kl * m)))
+        return {"advantages_tok": pad(adv),
+                "returns": pad(np.asarray(ret)),
+                "values_pad": pad(np.asarray(values[:, 1:]))}
 
-        t0 = time.perf_counter()
+    def _stage_ppo_update(self, io):
+        ins = io.ins
         tb = {
-            "tokens": jnp.asarray(toks),
-            "response_mask": jnp.asarray(mask),
-            "old_logp": jnp.asarray(old_logp),
-            "values": jnp.asarray(pad(np.asarray(values[:, 1:]))),
-            "old_values": jnp.asarray(pad(np.asarray(values[:, 1:]))),
-            "advantages_tok": jnp.asarray(pad(adv)),
-            "returns": jnp.asarray(pad(np.asarray(ret))),
+            "tokens": jnp.asarray(ins["tokens"]),
+            "response_mask": jnp.asarray(ins["response_mask"]),
+            "old_logp": jnp.asarray(ins["old_logp"]),
+            "values": jnp.asarray(ins["values_pad"]),
+            "old_values": jnp.asarray(ins["values_pad"]),
+            "advantages_tok": jnp.asarray(ins["advantages_tok"]),
+            "returns": jnp.asarray(ins["returns"]),
         }
         self.params, self.opt_state, metrics = self.train_step(
             self.params, self.opt_state, tb)
-        update_time = time.perf_counter() - t0
-
-        return IterationStats(
-            reward_mean=float(np.mean(rewards)),
-            reward_std=float(np.std(rewards)),
-            loss=float(metrics["loss"]),
-            kl=float(np.mean(np.abs(kl * m))),
-            gen_time=gen_time, infer_time=infer_time, update_time=update_time,
-            reshard=reshard_led.snapshot(),
-            dispatch=self.dock.ledger.snapshot(),
-        )
+        self._it["losses"].append(float(metrics["loss"]))
+        return None

@@ -1,16 +1,20 @@
-"""GRPO trainer — the full MindSpeed-RL iteration:
+"""GRPO trainer — the MindSpeed-RL iteration as a declared dataflow graph:
 
   generation stage  -> inference stage -> update stage
         ^                                     |
         +---- resharding flow (allgather-swap) ----+
 
-with the sample flow routed through the distributed transfer dock.  Runs for
-real on CPU at smoke scale (the end-to-end examples) and is the template the
-launch layer lowers at production scale.
+The algorithm is DECLARED in ``build_grpo_graph`` as stage nodes over dock
+fields; the shared ``GraphExecutor`` (core/graph.py) schedules any node
+whose inputs are ready per the transfer-dock metadata, handles the
+update<->generation weight-layout transitions that the graph's layout
+edges demand, and fuses independent ready stages (ref-inference ∥ reward ∥
+actor-inference) by dispatching them concurrently.  Runs for real on CPU at
+smoke scale (the end-to-end examples) and is the template the launch layer
+lowers at production scale.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import jax
@@ -19,6 +23,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, RLConfig
 from repro.core import grpo
+from repro.core.graph import GraphExecutor, RLGraph, StageNode
 from repro.core.resharding import Resharder
 from repro.core.transfer_dock import (CentralReplayBuffer, DispatchLedger,
                                       TransferDock)
@@ -42,13 +47,61 @@ class IterationStats:
     update_time: float
     reshard: dict = field(default_factory=dict)
     dispatch: dict = field(default_factory=dict)
+    trace: list = field(default_factory=list)   # executor (node, idxs) log
+
+
+# ---------------------------------------------------------------------------
+# graph declaration — the paper's Fig. 1 nodes/edges for GRPO/DAPO
+# ---------------------------------------------------------------------------
+
+def build_grpo_graph(actor_node: int = 0, ref_node: int = 1,
+                     reward_node: int = 2) -> RLGraph:
+    """GRPO as an RLGraph: generation fans out to three independent
+    consumers (actor/ref inference + reward — the fusion set), rewards
+    gather into group advantages, and everything joins at the update."""
+    T = GRPOTrainer
+    return RLGraph("grpo", [
+        StageNode("actor_generation", actor_node,
+                  inputs=("prompt",),
+                  outputs=("tokens", "response_mask"),
+                  fn=T._stage_generate, layout="generation", timing="gen"),
+        StageNode("actor_inference", actor_node,
+                  inputs=("tokens",), outputs=("old_logp",),
+                  fn=T._stage_old_logp, layout="update"),
+        StageNode("ref_inference", ref_node,
+                  inputs=("tokens",), outputs=("ref_logp",),
+                  fn=T._stage_ref_logp, stream=True),
+        StageNode("reward", reward_node,
+                  inputs=("tokens",), outputs=("rewards",),
+                  fn=T._stage_reward, stream=True),
+        StageNode("advantages", reward_node,
+                  inputs=("rewards",), outputs=("advantages",),
+                  fn=T._stage_advantages),
+        StageNode("actor_update", actor_node,
+                  inputs=("tokens", "response_mask", "old_logp", "ref_logp",
+                          "advantages"),
+                  outputs=(),
+                  fn=T._stage_update, layout="update", timing="update"),
+    ])
 
 
 class GRPOTrainer:
+    """Owns model/optimizer state and the workers; the iteration itself is
+    ``self.graph`` executed by the shared ``GraphExecutor``."""
+
+    clear_dock_each_iteration = True
+
     def __init__(self, cfg: ModelConfig, rl: RLConfig, dataset: PromptDataset,
                  *, num_nodes: int = 4, microbatch: int = 0, seed: int = 0,
                  mesh=None):
         assert cfg.vocab_size >= ByteTokenizer.vocab_size
+        if rl.partial_rollout and self.clear_dock_each_iteration:
+            # the flag is honored by the PartialRolloutTrainer graph (which
+            # keeps dock indices across iterations); silently running plain
+            # GRPO/PPO against it would be a no-op the user cannot see
+            raise ValueError(
+                "rl.partial_rollout=True needs PartialRolloutTrainer "
+                "(core/partial.py), not " + type(self).__name__)
         self.cfg = cfg
         self.rl = rl
         self.dataset = dataset
@@ -66,6 +119,7 @@ class GRPOTrainer:
         self.opt_state = adamw_init(self.params)
         self.train_step = jax.jit(grpo.make_train_step(cfg, rl),
                                   donate_argnums=(0, 1))
+        self.gen_params = None   # generation-layout weights (executor-owned)
 
         # --- distribution -----------------------------------------------
         self.mesh = mesh or make_local_mesh()
@@ -75,159 +129,138 @@ class GRPOTrainer:
         self.resharder = Resharder(self.mesh, tspecs, gspecs,
                                    use_swap=rl.use_allgather_swap)
 
-        # --- workers + dock ----------------------------------------------
+        # --- workers + graph + dock --------------------------------------
         self.actor = ActorWorker(cfg, rl, eos_id=self.tok.eos_id,
                                  pad_id=self.tok.pad_id, node=0)
         self.ref = ReferenceWorker(cfg, self.ref_params, node=1 % num_nodes)
         self.reward = RewardWorker(dataset, node=2 % num_nodes)
-        states = {
-            "actor_generation": 0,
-            "actor_inference": 0,
-            "ref_inference": self.ref.node,
-            "reward": self.reward.node,
-            "actor_update": 0,
-        }
+        self.graph = self._build_graph()
         ledger = DispatchLedger(internode_bw=rl.internode_bw)
         if rl.use_transfer_dock:
             self.dock = TransferDock(min(rl.num_warehouses, num_nodes),
-                                     states, ledger)
+                                     self.graph.states(), ledger)
         else:
-            self.dock = CentralReplayBuffer(states, ledger)
+            self.dock = CentralReplayBuffer(self.graph.states(), ledger)
+        self.executor = GraphExecutor(self.dock, rl)
+        self.last_run = None
+
+    def _build_graph(self) -> RLGraph:
+        return build_grpo_graph(self.actor.node, self.ref.node,
+                                self.reward.node)
 
     # ------------------------------------------------------------------
-    def iteration(self, global_batch: int) -> IterationStats:
-        """One RL iteration over G prompts × N generations."""
-        cfg, rl = self.cfg, self.rl
-        G, N = global_batch, rl.num_generations
+    # per-iteration prompt enqueue (the graph's external field)
+    # ------------------------------------------------------------------
+    def _enqueue(self, global_batch: int) -> int | None:
+        """Put this iteration's prompts into the dock; returns the expected
+        per-stage sample count (None => greedy scheduling)."""
+        G, N = global_batch, self.rl.num_generations
         total = G * N
-        self.dock.clear()
-
         prompts, plens, metas = self.dataset.sample(G)
-        pl = prompts.shape[1]
+        self._plen = prompts.shape[1]
         prompts_rep = np.repeat(prompts, N, axis=0)
-        metas_rep = [metas[i // N] for i in range(total)]
-        idxs = list(range(total))
-        self.dock.put("prompt", idxs, prompts_rep, src_node=0)
+        self._metas = {i: metas[i // N] for i in range(total)}
+        self.dock.put("prompt", list(range(total)), prompts_rep,
+                      src_node=self.actor.node)
+        return total
 
-        # ---- resharding flow: update layout -> generation layout -------
-        gen_params, stash, reshard_led = self.resharder.to_generation(
-            self.params)
-        del self.params  # paper semantics: update buffers leave the device
-
-        # ---- generation stage ------------------------------------------
-        t0 = time.perf_counter()
-        ready = self.dock.request_metadata("actor_generation", ["prompt"])
-        pbatch = self.dock.get("actor_generation", "prompt", ready,
-                               dst_node=self.actor.node)
+    # ------------------------------------------------------------------
+    # stage callables (the graph nodes' fns)
+    # ------------------------------------------------------------------
+    def _stage_generate(self, io):
         self.key, k = jax.random.split(self.key)
+        pbatch = io.ins["prompt"]
         if self.actor.engine_kind == "serving":
             # continuous batching: each finished sample flows into the dock
             # the MOMENT its sequence completes, not at the batch barrier —
-            # downstream stages see readiness metadata per sample.
-            node = self.actor.node
+            # the executor sees per-sample readiness and starts stream
+            # stages (ref_inference, reward) before generation drains.
+            idxs = io.idxs
 
             def _stream(i, tokens_row, mask_row, length):
-                self.dock.put("tokens", [ready[i]], tokens_row[None],
-                              src_node=node)
-                self.dock.put("response_mask", [ready[i]], mask_row[None],
-                              src_node=node)
+                io.put("tokens", [idxs[i]], tokens_row[None])
+                io.put("response_mask", [idxs[i]], mask_row[None])
 
-            rollout = self.actor.generate(gen_params, pbatch, k,
-                                          on_finish=_stream)
-        else:
-            rollout = self.actor.generate(gen_params, pbatch, k)
-            self.dock.put("tokens", ready, rollout.tokens,
-                          src_node=self.actor.node)
-            self.dock.put("response_mask", ready, rollout.response_mask,
-                          src_node=self.actor.node)
-        self.dock.mark_consumed("actor_generation", ready)
-        gen_time = time.perf_counter() - t0
-        del gen_params
+            self.actor.generate(self.gen_params, pbatch, k,
+                                on_finish=_stream)
+            return None
+        roll = self.actor.generate(self.gen_params, pbatch, k)
+        return {"tokens": roll.tokens, "response_mask": roll.response_mask}
 
-        # ---- H2D swap back, overlapped with the inference stage --------
-        self.params, reshard_led = self.resharder.to_update(
-            stash, reshard_led)
+    def _stage_old_logp(self, io):
+        return {"old_logp": self.actor.old_logprobs(self.params,
+                                                    io.ins["tokens"])}
 
-        # ---- inference stage --------------------------------------------
-        t0 = time.perf_counter()
-        ready = self.dock.request_metadata("actor_inference", ["tokens"])
-        toks = self.dock.get("actor_inference", "tokens", ready, dst_node=0)
-        old_logp = self.actor.old_logprobs(self.params, toks)
-        self.dock.put("old_logp", ready, old_logp, src_node=0)
-        self.dock.mark_consumed("actor_inference", ready)
+    def _stage_ref_logp(self, io):
+        return {"ref_logp": self.ref.logprobs(io.ins["tokens"])}
 
-        # ref-inference and reward are independent consumers of the same
-        # samples; with stage fusion (paper Table 2) they run CONCURRENTLY —
-        # ref's jitted forward releases the GIL while the rule reward scores
-        # on the host.
-        ready_ref = self.dock.request_metadata("ref_inference", ["tokens"])
-        toks_ref = self.dock.get("ref_inference", "tokens", ready_ref,
-                                 dst_node=self.ref.node)
-        ready_rw = self.dock.request_metadata("reward", ["tokens"])
-        toks_rw = self.dock.get("reward", "tokens", ready_rw,
-                                dst_node=self.reward.node)
-        if self.rl.stage_fusion:
-            from concurrent.futures import ThreadPoolExecutor
+    def _stage_reward(self, io):
+        rw = self.reward.score([self._metas[i] for i in io.idxs],
+                               io.ins["tokens"], self._plen)
+        for idx, r in zip(io.idxs, rw):
+            self._it["reward_by_idx"][idx] = float(r)
+        return {"rewards": np.asarray(rw)[:, None]}
 
-            with ThreadPoolExecutor(max_workers=2) as ex:
-                f_ref = ex.submit(self.ref.logprobs, toks_ref)
-                f_rw = ex.submit(self.reward.score,
-                                 [metas_rep[i] for i in ready_rw],
-                                 toks_rw, pl)
-                ref_logp, rewards = f_ref.result(), f_rw.result()
-        else:
-            ref_logp = self.ref.logprobs(toks_ref)
-            rewards = self.reward.score([metas_rep[i] for i in ready_rw],
-                                        toks_rw, pl)
-        self.dock.put("ref_logp", ready_ref, ref_logp, src_node=self.ref.node)
-        self.dock.mark_consumed("ref_inference", ready_ref)
-        ready = ready_rw
+    def _stage_advantages(self, io):
+        N = self.rl.num_generations
+        rw = io.ins["rewards"][:, 0]
+        self._it["rewards_arr"] = rw
         adv = np.asarray(
-            grpo.group_advantages(jnp.asarray(rewards.reshape(G, N)))
+            grpo.group_advantages(jnp.asarray(rw.reshape(-1, N)))
         ).reshape(-1)
-        self.dock.put("advantages", ready, adv[:, None],
-                      src_node=self.reward.node)
-        self.dock.mark_consumed("reward", ready)
-        infer_time = time.perf_counter() - t0
+        return {"advantages": adv[:, None]}
 
-        # ---- update stage ------------------------------------------------
-        t0 = time.perf_counter()
-        ready = self.dock.request_metadata(
-            "actor_update",
-            ["tokens", "response_mask", "old_logp", "ref_logp", "advantages"])
-        mb = self.microbatch or len(ready)
-        losses, kls = [], []
-        for lo in range(0, len(ready), mb):
-            sel = ready[lo:lo + mb]
+    def _stage_update(self, io):
+        ins = io.ins
+        n = len(io.idxs)
+        mb = self.microbatch or n
+        for lo in range(0, n, mb):
+            sl = slice(lo, lo + mb)
             batch = {
-                "tokens": jnp.asarray(self.dock.get(
-                    "actor_update", "tokens", sel, 0)),
-                "response_mask": jnp.asarray(self.dock.get(
-                    "actor_update", "response_mask", sel, 0)),
-                "old_logp": jnp.asarray(self.dock.get(
-                    "actor_update", "old_logp", sel, 0)),
-                "ref_logp": jnp.asarray(self.dock.get(
-                    "actor_update", "ref_logp", sel, 0)),
-                "advantages": jnp.asarray(self.dock.get(
-                    "actor_update", "advantages", sel, 0))[:, 0],
+                "tokens": jnp.asarray(ins["tokens"][sl]),
+                "response_mask": jnp.asarray(ins["response_mask"][sl]),
+                "old_logp": jnp.asarray(ins["old_logp"][sl]),
+                "ref_logp": jnp.asarray(ins["ref_logp"][sl]),
+                "advantages": jnp.asarray(ins["advantages"][sl])[:, 0],
             }
             self.params, self.opt_state, metrics = self.train_step(
                 self.params, self.opt_state, batch)
-            losses.append(float(metrics["loss"]))
-            kls.append(float(metrics["kl"]))
-        self.dock.mark_consumed("actor_update", ready)
-        update_time = time.perf_counter() - t0
+            self._it["losses"].append(float(metrics["loss"]))
+            self._it["kls"].append(float(metrics["kl"]))
+        return None
 
+    # ------------------------------------------------------------------
+    def iteration(self, global_batch: int) -> IterationStats:
+        """One RL iteration: enqueue prompts, run the graph to quiescence."""
+        if self.clear_dock_each_iteration:
+            self.dock.clear()
+        expected = self._enqueue(global_batch)
+        self._it = {"losses": [], "kls": [], "reward_by_idx": {}}
+        run = self.executor.run(self.graph, self, expected=expected)
+        self.last_run = run
+        return self._stats(run)
+
+    def _stats(self, run) -> IterationStats:
+        it = self._it
+        rw = it.get("rewards_arr")
+        if rw is None and it["reward_by_idx"]:
+            rw = np.asarray([it["reward_by_idx"][i]
+                             for i in sorted(it["reward_by_idx"])])
+        losses, kls = it["losses"], it["kls"]
         return IterationStats(
-            reward_mean=float(np.mean(rewards)),
-            reward_std=float(np.std(rewards)),
-            loss=float(np.mean(losses)),
-            kl=float(np.mean(kls)),
-            gen_time=gen_time,
-            infer_time=infer_time,
-            update_time=update_time,
-            reshard=reshard_led.snapshot(),
+            reward_mean=float(np.mean(rw)) if rw is not None and len(rw)
+            else 0.0,
+            reward_std=float(np.std(rw)) if rw is not None and len(rw)
+            else 0.0,
+            loss=float(np.mean(losses)) if losses else 0.0,
+            kl=it.get("kl_stat",
+                      float(np.mean(kls)) if kls else 0.0),
+            gen_time=run.stage_times["gen"],
+            infer_time=run.stage_times["infer"],
+            update_time=run.stage_times["update"],
+            reshard=run.reshard.snapshot(),
             dispatch=self.dock.ledger.snapshot(),
+            trace=list(run.trace),
         )
 
     def throughput(self, stats: IterationStats, global_batch: int,

@@ -144,6 +144,15 @@ class TransferDock:
                 ctl.on_meta(int(idx), fld)
 
     def get(self, state: str, fld: str, idxs, dst_node: int) -> np.ndarray:
+        if not len(idxs):
+            # well-shaped empty batch so streaming/graph consumers can poll:
+            # borrow the row shape/dtype from any stored row of this field
+            for wh in self.warehouses:
+                stored = wh.store.get(fld)
+                if stored:
+                    proto = next(iter(stored.values()))
+                    return np.empty((0,) + proto.shape, proto.dtype)
+            return np.empty((0, 0), np.float32)
         rows = []
         for idx in idxs:
             wh = self._wh(int(idx))

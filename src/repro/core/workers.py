@@ -33,12 +33,14 @@ class ActorWorker:
             self.engine = ServingEngine(
                 cfg, max_new=rl.max_response_len, eos_id=eos_id,
                 pad_id=pad_id, temperature=rl.temperature,
+                greedy=getattr(rl, "greedy", False),
                 max_slots=rl.serve_max_slots,
                 block_size=rl.serve_block_size)
         elif self.engine_kind == "sync":
             self.engine = RolloutEngine(
                 cfg, max_new=rl.max_response_len, eos_id=eos_id,
-                pad_id=pad_id, temperature=rl.temperature)
+                pad_id=pad_id, temperature=rl.temperature,
+                greedy=getattr(rl, "greedy", False))
         else:
             raise ValueError(f"unknown rollout engine {self.engine_kind!r}; "
                              f"expected 'sync' or 'serving'")

@@ -182,6 +182,22 @@ def run_pipeline_demo(arch: str = "yi-6b", microbatches: int = 8,
     return rec
 
 
+def run_graphs() -> None:
+    """Print the declared RL dataflow graphs (paper Fig. 1 as RLGraph) —
+    the static view of what the GraphExecutor schedules; no compilation."""
+    from repro.core.partial import build_partial_graph
+    from repro.core.ppo_trainer import build_ppo_graph
+    from repro.core.trainer import build_grpo_graph
+
+    for build in (build_grpo_graph, build_ppo_graph, build_partial_graph):
+        g = build()
+        print(g.describe())
+        print("  edges:")
+        for src, fld, dst in g.edges():
+            print(f"    {src} --{fld}--> {dst}")
+        print()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -192,8 +208,14 @@ def main() -> None:
     ap.add_argument("--gen-mode", default="2d", choices=["2d", "tp"])
     ap.add_argument("--reshard", action="store_true")
     ap.add_argument("--pipeline", action="store_true")
+    ap.add_argument("--graph", action="store_true",
+                    help="print the declared RL dataflow graphs and exit")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
+
+    if args.graph:
+        run_graphs()
+        return
 
     if args.pipeline:
         run_pipeline_demo(args.arch or "yi-6b")

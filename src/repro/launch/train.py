@@ -35,6 +35,16 @@ def main() -> None:
     ap.add_argument("--num-nodes", type=int, default=4)
     ap.add_argument("--no-transfer-dock", action="store_true")
     ap.add_argument("--no-allgather-swap", action="store_true")
+    ap.add_argument("--no-stage-fusion", action="store_true",
+                    help="dispatch independent ready graph nodes "
+                         "sequentially instead of concurrently")
+    ap.add_argument("--partial-rollout", action="store_true",
+                    help="budgeted long-tail generation across iterations")
+    ap.add_argument("--rollout-budget", type=int, default=8,
+                    help="tokens per sequence per iteration "
+                         "(--partial-rollout)")
+    ap.add_argument("--print-graph", action="store_true",
+                    help="print the declared RLGraph and exit")
     ap.add_argument("--task", default="pattern",
                     choices=["pattern", "arithmetic"])
     ap.add_argument("--seed", type=int, default=0)
@@ -43,9 +53,14 @@ def main() -> None:
     ap.add_argument("--resume", default=None,
                     help="checkpoint path to restore the policy from")
     args = ap.parse_args()
+    if args.partial_rollout and args.algorithm == "ppo":
+        ap.error("--partial-rollout implements the GRPO family; "
+                 "it cannot be combined with --algorithm ppo")
 
     # imports deferred so --help never initializes jax
     from repro.checkpoint import load_pytree, save_pytree
+    from repro.core.partial import PartialRolloutTrainer
+    from repro.core.ppo_trainer import PPOTrainer
     from repro.core.trainer import GRPOTrainer
     from repro.data.prompts import PromptDataset, arithmetic_task, pattern_task
 
@@ -60,12 +75,36 @@ def main() -> None:
         lr=args.lr, kl_coef=args.kl_coef,
         use_transfer_dock=not args.no_transfer_dock,
         use_allgather_swap=not args.no_allgather_swap,
+        stage_fusion=not args.no_stage_fusion,
+        partial_rollout=args.partial_rollout,
         num_warehouses=args.num_nodes,
     )
+    if args.print_graph:
+        # static declaration — no model/optimizer init needed; node ids
+        # match the trainer's worker placement for --num-nodes
+        from repro.core.partial import build_partial_graph
+        from repro.core.ppo_trainer import build_ppo_graph
+        from repro.core.trainer import build_grpo_graph
+        build = (build_partial_graph if args.partial_rollout
+                 else build_ppo_graph if args.algorithm == "ppo"
+                 else build_grpo_graph)
+        print(build(0, 1 % args.num_nodes, 2 % args.num_nodes).describe())
+        return
+
     task = pattern_task() if args.task == "pattern" else arithmetic_task()
     ds = PromptDataset(task, max_prompt_len=rl.max_prompt_len, seed=args.seed)
-    trainer = GRPOTrainer(cfg, rl, ds, num_nodes=args.num_nodes,
-                          seed=args.seed)
+    # every algorithm is a graph DECLARATION over the same executor: the
+    # trainer classes differ only in which RLGraph they build
+    if args.partial_rollout:
+        trainer = PartialRolloutTrainer(cfg, rl, ds, budget=args.rollout_budget,
+                                        num_nodes=args.num_nodes,
+                                        seed=args.seed)
+    elif args.algorithm == "ppo":
+        trainer = PPOTrainer(cfg, rl, ds, num_nodes=args.num_nodes,
+                             seed=args.seed)
+    else:
+        trainer = GRPOTrainer(cfg, rl, ds, num_nodes=args.num_nodes,
+                              seed=args.seed)
     if args.resume:
         trainer.params = load_pytree(args.resume, trainer.params)
         print(f"restored policy from {args.resume}")

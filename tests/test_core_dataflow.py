@@ -43,6 +43,56 @@ def test_dock_metadata_readiness():
     assert dock.request_metadata("reward", ["a", "b"]) == []
 
 
+def test_dock_get_empty_idxs_well_shaped():
+    """Streaming/graph consumers poll with whatever is ready — an empty
+    request must return an empty batch, not raise from np.stack([])."""
+    dock = _dock()
+    dock.put("x", [0, 1], np.zeros((2, 3, 4), np.float32), src_node=0)
+    got = dock.get("actor_update", "x", [], dst_node=0)
+    assert got.shape == (0, 3, 4) and got.dtype == np.float32
+    # a field nobody has produced yet still yields an empty batch
+    empty = dock.get("actor_update", "nope", [], dst_node=0)
+    assert empty.shape[0] == 0
+
+
+def test_controller_available_limit():
+    dock = _dock()
+    dock.put("a", list(range(6)), np.zeros((6, 2), np.float32), src_node=0)
+    ctl = dock.controllers["reward"]
+    assert ctl.available(["a"]) == [0, 1, 2, 3, 4, 5]
+    assert ctl.available(["a"], limit=2) == [0, 1]
+    assert ctl.available(["a"], limit=0) == []
+    assert ctl.available(["a"], limit=99) == [0, 1, 2, 3, 4, 5]
+    dock.mark_consumed("reward", [0, 1])
+    assert ctl.available(["a"], limit=2) == [2, 3]
+    assert dock.request_metadata("reward", ["a"], limit=3) == [2, 3, 4]
+
+
+def test_metadata_requests_intranode_for_dock_cross_for_central():
+    """Paper Table 1: TDControllers are co-located with their worker, so
+    metadata requests never cross the network; the centralized buffer pins
+    its controller to node 0, so every off-node worker's request does."""
+    states = {"ref_inference": 1}           # worker lives on node 1
+    td = TransferDock(2, states, DispatchLedger())
+    td.put("x", [0], np.zeros((1, 2), np.float32), src_node=1)
+    before = td.ledger.internode_bytes
+    td.request_metadata("ref_inference", ["x"])
+    assert td.ledger.internode_bytes == before      # intranode metadata
+    assert td.ledger.metadata_bytes > 0
+
+    cb = CentralReplayBuffer(states, DispatchLedger())
+    cb.put("x", [0], np.zeros((1, 2), np.float32), src_node=1)
+    before = cb.ledger.internode_bytes
+    cb.request_metadata("ref_inference", ["x"])
+    assert cb.ledger.internode_bytes > before       # crossed the network
+    # a worker that happens to sit on node 0 stays intranode even centrally
+    cb0 = CentralReplayBuffer({"actor_update": 0}, DispatchLedger())
+    cb0.put("x", [0], np.zeros((1, 2), np.float32), src_node=0)
+    before = cb0.ledger.internode_bytes
+    cb0.request_metadata("actor_update", ["x"])
+    assert cb0.ledger.internode_bytes == before
+
+
 def test_dock_sharding_across_warehouses():
     dock = _dock(S=4)
     dock.put("x", list(range(8)), np.zeros((8, 10), np.float32), src_node=0)

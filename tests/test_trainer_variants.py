@@ -28,6 +28,21 @@ def test_ppo_trainer_iteration():
     assert np.isfinite(st2.loss)
 
 
+def test_ppo_routes_through_metadata_plane():
+    """PPO inference/update go through request_metadata/mark_consumed (the
+    dispatch ledger used to undercount PPO metadata traffic and consumed
+    state was never recorded)."""
+    rl = RLConfig(max_prompt_len=12, max_response_len=8, lr=1e-4)
+    tr = PPOTrainer(TINY, rl, _ds(), num_nodes=4, seed=0)
+    st = tr.iteration(global_batch=4)
+    for state in ("actor_generation", "actor_inference", "ref_inference",
+                  "reward", "advantages", "actor_update"):
+        assert tr.dock.controllers[state].consumed == set(range(4)), state
+    assert st.dispatch["metadata_msgs"] > 0
+    # the update stage was dispatched by readiness, not raw indexing
+    assert ("actor_update", (0, 1, 2, 3)) in st.trace
+
+
 def test_pf_ppo_trainer_iteration():
     rl = RLConfig(max_prompt_len=12, max_response_len=8, lr=1e-4)
     tr = PPOTrainer(TINY, rl, _ds(), pf_filter=True, num_nodes=4, seed=0)
