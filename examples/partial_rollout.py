@@ -1,0 +1,46 @@
+"""Partial rollout (paper Table 2), serving-backed: long-tail sequences are
+split across iterations by a per-request token budget.  Each iteration the
+generation node submits every pending sequence to the continuous-batching
+``ServingEngine`` — carried-over ones mid-sequence, re-prefilled like a
+preemption refill — and finished samples stream into the transfer dock the
+moment they complete, so downstream stages start before the drain ends.
+
+    PYTHONPATH=src python examples/partial_rollout.py
+"""
+import jax
+
+from repro.configs import get_smoke_config
+from repro.configs.base import RLConfig
+from repro.core.partial import PartialRolloutTrainer
+from repro.data.prompts import PromptDataset, pattern_task
+
+
+def main():
+    cfg = get_smoke_config("yi-6b").replace(dtype="float32", remat=False)
+    rl = RLConfig(num_generations=2, max_prompt_len=16, max_response_len=24,
+                  lr=2e-4, partial_rollout=True, serve_max_slots=4,
+                  serve_block_size=8)
+    ds = PromptDataset(pattern_task(), max_prompt_len=16, seed=0)
+    trainer = PartialRolloutTrainer(cfg, rl, ds, budget=8, num_nodes=4,
+                                    seed=0)
+    eng = trainer.actor.engine
+    print(f"arch={cfg.name}  budget=8 tok/iter  response cap="
+          f"{rl.max_response_len}  engine={type(eng).__name__} "
+          f"({rl.serve_max_slots} slots)")
+
+    for it in range(4):
+        stats = trainer.iteration(global_batch=4)
+        consumed = len(trainer.dock.controllers["actor_update"].consumed)
+        print(f"iter {it}: pending={trainer.pending_partials:>2}  "
+              f"updated(groups complete)={consumed:>2}  "
+              f"reward={stats.reward_mean:+.3f}  loss={stats.loss:.4f}  "
+              f"decode steps={eng.steps}")
+    # the engine-wide cap was never clobbered by the budgeted requests
+    assert eng.max_new == rl.max_response_len
+    print("\nper-request budgets left the engine cap untouched "
+          f"(max_new={eng.max_new}); resumes re-prefill through the same "
+          "path as recompute preemption.")
+
+
+if __name__ == "__main__":
+    main()

@@ -360,6 +360,7 @@ class GraphExecutor:
                              f"{missing} — build the dock from graph.states()")
         self._run = run = GraphRun()
         run.counts = {n.name: 0 for n in graph.nodes}
+        producers = {f: n.name for n in graph.nodes for f in n.outputs}
         self._layout = "update"
         self._stash = None
         seen: set = set()
@@ -386,6 +387,21 @@ class GraphExecutor:
                     runnable.append((node, idxs))
                 if not runnable:
                     break
+                # producer deferral: a node whose input-producer is also
+                # runnable this round would fire on a partial view of the
+                # producer's output (greedy non-stream nodes fire only once
+                # per run, so samples the producer emits later would strand
+                # until next iteration — and WHICH samples would depend on
+                # streaming poll timing).  Defer the consumer; it fires next
+                # round once the producer quiesces.  A topologically minimal
+                # runnable node is never deferred, so progress is guaranteed;
+                # barrier (expected) rounds are unaffected — a consumer only
+                # becomes runnable there after its producer fully ran.
+                ready_names = {n.name for n, _ in runnable}
+                runnable = [(n, i) for n, i in runnable
+                            if not any(producers.get(f) in ready_names
+                                       and producers[f] != n.name
+                                       for f in n.inputs)]
                 run.rounds += 1
                 # nodes that agree on a layout dispatch together; the first
                 # declared layout requirement picks the round's layout

@@ -90,6 +90,10 @@ class GRPOTrainer:
     ``self.graph`` executed by the shared ``GraphExecutor``."""
 
     clear_dock_each_iteration = True
+    # subclasses may pin the actor's generation engine (None => honor
+    # rl.rollout_engine); partial rollout pins "serving" — budgeted resume
+    # is an engine capability, not a trainer loop
+    actor_engine_kind: str | None = None
 
     def __init__(self, cfg: ModelConfig, rl: RLConfig, dataset: PromptDataset,
                  *, num_nodes: int = 4, microbatch: int = 0, seed: int = 0,
@@ -131,7 +135,8 @@ class GRPOTrainer:
 
         # --- workers + graph + dock --------------------------------------
         self.actor = ActorWorker(cfg, rl, eos_id=self.tok.eos_id,
-                                 pad_id=self.tok.pad_id, node=0)
+                                 pad_id=self.tok.pad_id, node=0,
+                                 engine=self.actor_engine_kind)
         self.ref = ReferenceWorker(cfg, self.ref_params, node=1 % num_nodes)
         self.reward = RewardWorker(dataset, node=2 % num_nodes)
         self.graph = self._build_graph()

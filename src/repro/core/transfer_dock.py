@@ -121,6 +121,11 @@ class TransferDock:
         self.controllers = {s: TDController(s, node) for s, node in
                             states.items()}
         self.ledger = ledger or DispatchLedger()
+        # per-field row prototype (shape, dtype), remembered at first put so
+        # empty gets stay well-shaped even after rows are consumed/cleared —
+        # a field's row geometry is fixed by the algorithm config, not by
+        # which samples currently sit in the warehouses
+        self._proto: dict[str, tuple] = {}
 
     # -- routing ------------------------------------------------------------
     def _wh(self, idx: int) -> TDWarehouse:
@@ -131,6 +136,8 @@ class TransferDock:
         """rows: array (n, ...) or list of per-sample arrays."""
         for j, idx in enumerate(idxs):
             row = np.asarray(rows[j])
+            if fld not in self._proto:
+                self._proto[fld] = (row.shape, row.dtype)
             wh = self._wh(idx)
             self.ledger.record(row.nbytes, cross=wh.node != src_node,
                                node=wh.node)
@@ -145,14 +152,18 @@ class TransferDock:
 
     def get(self, state: str, fld: str, idxs, dst_node: int) -> np.ndarray:
         if not len(idxs):
-            # well-shaped empty batch so streaming/graph consumers can poll:
-            # borrow the row shape/dtype from any stored row of this field
-            for wh in self.warehouses:
-                stored = wh.store.get(fld)
-                if stored:
-                    proto = next(iter(stored.values()))
-                    return np.empty((0,) + proto.shape, proto.dtype)
-            return np.empty((0, 0), np.float32)
+            # well-shaped empty batch so streaming/graph consumers can poll —
+            # sized from the field's prototype (first row ever put), never
+            # invented: a made-up (0, 0) float32 would lie about width/dtype
+            # to whatever concatenates downstream
+            proto = self._proto.get(fld)
+            if proto is None:
+                raise KeyError(
+                    f"transfer dock: empty get of field {fld!r} (worker "
+                    f"state {state!r}) before any put of that field — there "
+                    f"is no prototype row to size the empty batch; known "
+                    f"fields: {sorted(self._proto)}")
+            return np.empty((0,) + proto[0], proto[1])
         rows = []
         for idx in idxs:
             wh = self._wh(int(idx))

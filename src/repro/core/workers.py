@@ -61,6 +61,25 @@ class ActorWorker:
                                         on_finish=on_finish)
         return self.engine.generate(gen_params, prompts, key, extras)
 
+    # generation state, budgeted (partial rollout) ----------------------------
+    # Resume/stream logic lives in the serving engine, not the trainer: a
+    # request is submitted (possibly mid-sequence) with a per-request token
+    # budget, and run_to_budget hands unfinished ones back resumable.
+    def submit(self, prompt, *, max_new=None, budget=None, generated=None):
+        self._require_serving("submit")
+        return self.engine.submit(prompt, max_new=max_new, budget=budget,
+                                  generated=generated)
+
+    def run_to_budget(self, gen_params, on_finish=None):
+        self._require_serving("run_to_budget")
+        return self.engine.run_to_budget(gen_params, on_finish=on_finish)
+
+    def _require_serving(self, what: str) -> None:
+        if self.engine_kind != "serving":
+            raise RuntimeError(
+                f"{what} needs the serving engine (budgeted/mid-sequence "
+                f"requests); this actor runs {self.engine_kind!r}")
+
     # inference state ---------------------------------------------------------
     def old_logprobs(self, params, tokens: np.ndarray, extras=None):
         batch = {"tokens": jnp.asarray(tokens)}

@@ -39,7 +39,9 @@ def main() -> None:
                     help="dispatch independent ready graph nodes "
                          "sequentially instead of concurrently")
     ap.add_argument("--partial-rollout", action="store_true",
-                    help="budgeted long-tail generation across iterations")
+                    help="budgeted long-tail generation across iterations "
+                         "(runs on the continuous-batching serving engine; "
+                         "resume = mid-sequence re-prefill)")
     ap.add_argument("--rollout-budget", type=int, default=8,
                     help="tokens per sequence per iteration "
                          "(--partial-rollout)")

@@ -5,9 +5,11 @@
     reads and a pure-JAX reference path.
   * ``scheduler``    — request queue: admission, slot assignment, EOS-driven
     eviction and refill, and recompute-preemption when blocks run out.
-  * ``engine``       — ``ServingEngine``: online ``submit/step/drain`` plus a
-    ``generate()`` batch API that is a drop-in for ``core.rollout``'s
-    ``RolloutEngine``.
+  * ``engine``       — ``ServingEngine``: online ``submit/step/drain`` (with
+    mid-sequence submission and per-run budgets — ``run_to_budget`` hands
+    budget-exhausted requests back resumable, the backend of partial
+    rollout) plus a ``generate()`` batch API that is a drop-in for
+    ``core.rollout``'s ``RolloutEngine``.
 """
 from repro.serve.engine import RequestOutput, ServingEngine  # noqa: F401
 from repro.serve.paged_cache import PagedKVCache  # noqa: F401

@@ -6,7 +6,12 @@ Two APIs over one machinery:
     request loop.  Each ``step`` admits whatever fits (prefill + KV inject),
     runs ONE fused decode step over the whole slot batch, and evicts finished
     sequences immediately — freed slots refill next step, so short requests
-    never wait for long ones.
+    never wait for long ones.  A request may be submitted MID-SEQUENCE
+    (``generated=`` carries tokens from earlier runs; admission re-prefills
+    prompt+seed exactly like a recompute-preemption refill) and carry a
+    per-run ``budget``; ``run_to_budget(params)`` drains the queue and
+    returns budget-exhausted requests as RESUMABLE — this is what backs
+    cross-iteration partial rollout (core/partial.py).
   * batch   — ``generate(params, prompts, key)``: drop-in for
     ``core.rollout.RolloutEngine.generate``.  All prompts are prefilled in a
     single jitted call (bit-identical to the synchronized engine) and their
@@ -86,6 +91,7 @@ class ServingEngine:
         self._key = jax.random.PRNGKey(seed)
         self._next_rid = 0
         self._on_finish = None
+        self._resumable: list[Request] = []  # budget-exhausted, slot freed
         self.steps = 0                      # fused decode steps run
         if max_seq_len is not None:
             self._ensure_state(max_seq_len)
@@ -102,16 +108,22 @@ class ServingEngine:
         if self.cache is not None:
             if self.cache.max_blocks_per_seq >= mb:
                 return
-            if not self.sched.idle:
+            if self.sched.running:
+                # running sequences have KV rows in the pool — regrowing
+                # would orphan them; queued-only is safe (blocks are only
+                # allocated at admission)
                 raise RuntimeError(
                     f"request needs {mb} blocks/seq but the pool was sized "
-                    f"for {self.cache.max_blocks_per_seq}; construct the "
-                    f"engine with max_seq_len>= {max_seq} for mixed loads")
+                    f"for {self.cache.max_blocks_per_seq} and sequences are "
+                    f"mid-decode; construct the engine with max_seq_len>= "
+                    f"{max_seq} for mixed loads")
+        waiting = self.sched.waiting if self.sched is not None else ()
         num_blocks = self._num_blocks_req or self.max_slots * mb
         self.cache = PagedKVCache(self.cfg, num_blocks=num_blocks,
                                   block_size=self.block_size,
                                   max_blocks_per_seq=mb)
         self.sched = Scheduler(self.cache, self.max_slots)
+        self.sched.waiting.extend(waiting)
 
     # ------------------------------------------------------------------
     # jitted pieces
@@ -149,8 +161,17 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # online API
     # ------------------------------------------------------------------
-    def submit(self, prompt, *, max_new: int | None = None) -> int:
+    def submit(self, prompt, *, max_new: int | None = None,
+               budget: int | None = None, generated=None) -> int:
         """Queue one request.  Returns its engine-assigned request id.
+
+        ``max_new`` caps the NEW tokens this submission may emit (defaults to
+        the engine-wide cap — never mutated per request).  ``generated``
+        seeds the request mid-sequence with tokens from earlier runs; the
+        admission prefill then covers prompt+seed, the same re-prefill the
+        recompute preemption does.  ``budget`` (≤ max_new to matter) makes
+        the request SUSPEND resumable after that many new tokens — collect
+        it from ``run_to_budget``.
 
         NOTE: admission prefill jit-compiles per distinct prompt length —
         fine for a demo/few-length workload; a varied-length online server
@@ -159,10 +180,19 @@ class ServingEngine:
         max_new = self.max_new if max_new is None else max_new
         if max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {max_new}")
-        self._ensure_state(len(prompt) + max_new)
+        if budget is not None and budget < 1:
+            raise ValueError(f"budget must be >= 1, got {budget}")
+        seed = [int(t) for t in generated] if generated is not None else []
+        self._ensure_state(len(prompt) + len(seed) + max_new)
         rid = self._next_rid
         self._next_rid += 1
-        self.sched.submit(Request(rid=rid, prompt=prompt, max_new=max_new))
+        # seeded tokens carry no engine-side logp (they were sampled in an
+        # earlier run, possibly under different weights) — pad with zeros to
+        # keep generated/gen_logp aligned
+        self.sched.submit(Request(rid=rid, prompt=prompt, max_new=max_new,
+                                  budget=budget, generated=seed,
+                                  gen_logp=[0.0] * len(seed),
+                                  resume_base=len(seed)))
         return rid
 
     def step(self, params) -> list[RequestOutput]:
@@ -196,17 +226,54 @@ class ServingEngine:
             req.cache_len += 1
             req.generated.append(int(nxt[slot]))
             req.gen_logp.append(float(lp[slot]))
-            if (req.generated[-1] == self.eos_id
-                    or len(req.generated) >= req.max_new):
-                self._finish(slot, finished)
+            self._retire(req, finished)
         return finished
 
     def drain(self, params) -> list[RequestOutput]:
-        """Run steps until every queued request has finished."""
+        """Run steps until every queued request has finished.  Budgeted
+        requests are refused here: their suspensions would be silently
+        stranded (this returns finished outputs only) — use
+        ``run_to_budget``, which collects them."""
+        if self.sched is not None and any(
+                r.budget is not None
+                for r in (*self.sched.waiting, *self.sched.running.values())):
+            raise RuntimeError(
+                "drain() would drop budget-suspended requests on the floor; "
+                "collect them with run_to_budget()")
+        return self._drain(params)
+
+    def _drain(self, params) -> list[RequestOutput]:
         outs: list[RequestOutput] = []
         while self.sched is not None and not self.sched.idle:
             outs.extend(self.step(params))
         return outs
+
+    def run_to_budget(self, params, on_finish=None
+                      ) -> tuple[list[RequestOutput], list[Request]]:
+        """Drain the queue, retiring every request either FINISHED (EOS, or
+        ``max_new`` new tokens emitted) or RESUMABLE (its per-run ``budget``
+        exhausted first).  Returns ``(finished, resumable)``.
+
+        Resumable requests' slots and KV blocks are already freed; continue
+        one next run with ``submit(req.prompt, generated=req.generated,
+        max_new=remaining, budget=...)`` — the re-prefill then happens under
+        whatever weights that run passes, which is exactly the mildly
+        off-policy resume partial rollout accepts by design.
+
+        ``on_finish(out: RequestOutput)`` fires per request the moment it
+        truly finishes (never for suspensions) — the partial-rollout trainer
+        streams rows into the transfer dock from it mid-drain."""
+        if on_finish is not None:
+            self._on_finish = on_finish
+        try:
+            outs = self._drain(params)
+        finally:
+            if on_finish is not None:
+                self._on_finish = None
+            # hand over (or, on an aborted drain, discard) this run's
+            # suspensions — stale entries must never leak into a later run
+            resumable, self._resumable = self._resumable, []
+        return outs, resumable
 
     # ------------------------------------------------------------------
     # admission / eviction
@@ -236,8 +303,18 @@ class ServingEngine:
                 req.first_token_at = time.perf_counter()
             req.generated.append(tok0)
             req.gen_logp.append(lp0)
-            if tok0 == self.eos_id or len(req.generated) >= req.max_new:
-                self._finish(req.slot, finished)
+            self._retire(req, finished)
+
+    def _retire(self, req: Request, finished: list) -> None:
+        """Evict the request if its last token ended it: EOS or ``max_new``
+        new tokens => finished; per-run ``budget`` reached => suspended
+        (resumable).  ``max_new`` is checked first, so a budget larger than
+        the remaining cap clamps itself."""
+        if (req.generated[-1] == self.eos_id
+                or req.num_new >= req.max_new):
+            self._finish(req.slot, finished)
+        elif req.budget is not None and req.num_new >= req.budget:
+            self._resumable.append(self.sched.suspend(req.slot))
 
     def _finish(self, slot: int, finished: list) -> None:
         req = self.sched.finish(slot)
@@ -280,7 +357,7 @@ class ServingEngine:
         rows: dict[int, tuple] = {}
 
         def sink(out: RequestOutput):
-            trow, mrow, n = self._assemble(out, pl, cap)
+            trow, mrow, n = self.assemble_row(out, pl, cap)
             rows[out.rid] = (trow, mrow, n, out)
             if on_finish is not None:
                 on_finish(out.rid, trow, mrow, n)
@@ -308,8 +385,10 @@ class ServingEngine:
         return RolloutResult(tokens=tokens, response_mask=mask,
                              gen_logp=gen_logp, lengths=lengths)
 
-    def _assemble(self, out: RequestOutput, pl: int, cap: int):
-        """RolloutEngine-format row: prompt + gen, PAD after EOS."""
+    def assemble_row(self, out: RequestOutput, pl: int, cap: int):
+        """RolloutEngine-format row: prompt + gen, PAD after EOS.  THE
+        dock-ready row format — every consumer (generate()'s on_finish and
+        the partial-rollout trainer's sink) assembles through here."""
         row = np.full((cap,), self.pad_id, np.int32)
         row[:pl] = out.prompt[:pl]
         n = len(out.gen)

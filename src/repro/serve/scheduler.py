@@ -10,8 +10,15 @@ When a running sequence needs a new block and the pool is dry, the scheduler
 preempts the YOUNGEST running request (vLLM's recompute preemption): its
 blocks are released, and the request re-queues at the FRONT with its
 generated-so-far tokens folded into the prompt, to be re-prefilled on
-re-admission — mirroring how ``core/partial.py`` resumes partial rollouts
-under the then-current weights.
+re-admission.
+
+The SAME re-prefill path serves cross-iteration partial rollout
+(``core/partial.py``): a request may be submitted MID-SEQUENCE, seeded with
+the tokens generated in earlier iterations (``generated`` +
+``resume_base``), and carry a per-run ``budget`` — when it produces
+``budget`` new tokens without finishing, the engine suspends it
+(``Scheduler.suspend``) and hands it back resumable, to be resubmitted next
+iteration under the then-current weights.
 
 The scheduler is pure host-side bookkeeping (numpy block tables, python
 queues); the engine owns all device work.
@@ -35,11 +42,17 @@ class OutOfBlocksError(RuntimeError):
 class Request:
     rid: int
     prompt: np.ndarray                 # (P,) int32 — original prompt
-    max_new: int
+    max_new: int                       # max NEW tokens this submission emits
+    budget: int | None = None          # suspend (resumable) after this many
+    #                                    new tokens; None => run to max_new
     submitted_at: float = field(default_factory=time.perf_counter)
     # -- runtime state (scheduler/engine owned) -----------------------------
+    # ``generated`` may be SEEDED at submission with tokens from earlier
+    # iterations (mid-sequence submit); ``resume_base`` marks how many, so
+    # ``max_new``/``budget`` count only tokens generated since this submit.
     generated: list = field(default_factory=list)    # sampled token ids
     gen_logp: list = field(default_factory=list)
+    resume_base: int = 0
     slot: int = -1
     cache_len: int = 0                 # KV rows currently in the paged cache
     preemptions: int = 0
@@ -60,8 +73,13 @@ class Request:
             [self.prompt, np.asarray(self.generated, np.int32)])
 
     @property
+    def num_new(self) -> int:
+        """Tokens generated since this submission (excludes the seed)."""
+        return len(self.generated) - self.resume_base
+
+    @property
     def total_len(self) -> int:
-        return len(self.prompt) + self.max_new
+        return len(self.prompt) + self.resume_base + self.max_new
 
 
 class Scheduler:
@@ -84,10 +102,11 @@ class Scheduler:
     def submit(self, req: Request) -> None:
         need = blocks_for(req.total_len, self.block_size)
         if need > self.max_blocks:
+            seed = (f" + seed {req.resume_base}" if req.resume_base else "")
             raise ValueError(
-                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
-                f"{req.max_new} needs {need} blocks > max_blocks_per_seq "
-                f"{self.max_blocks}")
+                f"request {req.rid}: prompt {len(req.prompt)}{seed} + "
+                f"max_new {req.max_new} needs {need} blocks > "
+                f"max_blocks_per_seq {self.max_blocks}")
         if need > self.cache.num_blocks:
             raise ValueError(
                 f"request {req.rid} needs {need} blocks but the pool only "
@@ -169,6 +188,18 @@ class Scheduler:
         req = self.running[slot]
         self._release(slot)
         req.finished_at = time.perf_counter()
+        return req
+
+    def suspend(self, slot: int) -> Request:
+        """Evict a request that exhausted its per-run ``budget`` without
+        finishing: slot and KV blocks are freed NOW; the caller owns the
+        request and may resubmit it mid-sequence later (re-prefill, like a
+        recompute preemption — but across engine runs, not within one)."""
+        req = self.running[slot]
+        self._release(slot)
+        req.slot = -1
+        req.cache_len = 0
+        req.stash = None
         return req
 
     def _release(self, slot: int) -> None:

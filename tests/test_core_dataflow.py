@@ -45,14 +45,20 @@ def test_dock_metadata_readiness():
 
 def test_dock_get_empty_idxs_well_shaped():
     """Streaming/graph consumers poll with whatever is ready — an empty
-    request must return an empty batch, not raise from np.stack([])."""
+    request must return an empty batch of the field's TRUE row shape/dtype
+    (remembered at first put), not an invented (0, 0) float32."""
     dock = _dock()
-    dock.put("x", [0, 1], np.zeros((2, 3, 4), np.float32), src_node=0)
+    dock.put("x", [0, 1], np.zeros((2, 3, 4), np.int32), src_node=0)
     got = dock.get("actor_update", "x", [], dst_node=0)
-    assert got.shape == (0, 3, 4) and got.dtype == np.float32
-    # a field nobody has produced yet still yields an empty batch
-    empty = dock.get("actor_update", "nope", [], dst_node=0)
-    assert empty.shape[0] == 0
+    assert got.shape == (0, 3, 4) and got.dtype == np.int32
+    # the prototype survives clear(): row geometry is config-determined
+    dock.clear()
+    got = dock.get("actor_update", "x", [], dst_node=0)
+    assert got.shape == (0, 3, 4) and got.dtype == np.int32
+    # a field nobody has EVER produced has no prototype — that is an error,
+    # not a made-up width/dtype lying to streaming consumers
+    with pytest.raises(KeyError, match="nope.*before any put"):
+        dock.get("actor_update", "nope", [], dst_node=0)
 
 
 def test_controller_available_limit():

@@ -307,6 +307,80 @@ def test_fusion_on_off_equivalent():
     assert {"ref_inference", "reward"} <= set(names[i_inf:i_inf + 3])
 
 
+class _BucketLoopPartial(PartialRolloutTrainer):
+    """The RETIRED partial-rollout implementation, kept verbatim as the
+    bit-identity reference: an ad-hoc bucket loop over the synchronized
+    engine that re-prefills equal-length prefixes together, mutates the
+    engine-wide cap, and can overshoot the response cap."""
+    actor_engine_kind = "sync"
+
+    def _build_graph(self):
+        from repro.core.graph import derive_nodes
+        base = super()._build_graph()
+        return RLGraph(base.name, derive_nodes(base, {
+            "actor_generation": dict(fn=_BucketLoopPartial._stage_generate),
+        }))
+
+    def _stage_generate(self, io):
+        from collections import defaultdict
+        rl = self.rl
+        pl = rl.max_prompt_len
+        cap = pl + rl.max_response_len
+        buckets = defaultdict(list)
+        for idx in io.idxs:
+            buckets[pl + self.partials[idx].ngen].append(idx)
+        finished = []
+        for plen, idxs in sorted(buckets.items()):
+            batch = np.stack([
+                np.concatenate([self.partials[i].prompt,
+                                np.asarray(self.partials[i].generated,
+                                           np.int32)]) for i in idxs])
+            self.key, k = jax.random.split(self.key)
+            eng = self.actor.engine
+            eng.max_new = self.budget
+            roll = eng.generate(self.gen_params, batch, k)
+            for j, idx in enumerate(idxs):
+                st = self.partials[idx]
+                n = int(roll.lengths[j])
+                new_tokens = roll.tokens[j, plen:plen + n]
+                st.generated.extend(int(t) for t in new_tokens)
+                hit_eos = bool((new_tokens == self.tok.eos_id).any())
+                if hit_eos or st.ngen >= rl.max_response_len:
+                    toks = np.concatenate(
+                        [st.prompt, np.asarray(st.generated, np.int32)])
+                    row = np.full((cap,), self.tok.pad_id, np.int32)
+                    row[:len(toks[:cap])] = toks[:cap]
+                    mask = np.zeros((cap,), np.float32)
+                    mask[pl:pl + st.ngen] = 1.0
+                    io.put("tokens", [idx], row[None])
+                    io.put("response_mask", [idx], mask[None])
+                    finished.append(idx)
+                    del self.partials[idx]
+        io.consumed = finished
+        return None
+
+
+def test_partial_serving_bit_identical_to_bucket_loop():
+    """Acceptance: serving-backed partial generation (submit/run_to_budget,
+    per-request budgets, on_finish streaming) reproduces the retired bucket
+    loop bit-for-bit under greedy decoding — budget 6 against cap 16 also
+    crosses the overshoot boundary the old loop papered over."""
+    rl = _rl(max_response_len=16, partial_rollout=True)
+    ta = PartialRolloutTrainer(TINY, rl, _ds(), budget=6, num_nodes=4,
+                               seed=0)
+    tb = _BucketLoopPartial(TINY, rl, _ds(), budget=6, num_nodes=4, seed=0)
+    assert ta.actor.engine_kind == "serving"
+    assert tb.actor.engine_kind == "sync"
+    for it in range(3):
+        sa = ta.iteration(global_batch=4)
+        sb = tb.iteration(global_batch=4)
+        assert np.isfinite(sa.loss) and np.isfinite(sb.loss)
+        assert ta.pending_partials == tb.pending_partials
+        _assert_params_equal(ta.params, tb.params)
+    # the serving trainer never clobbered its engine-wide cap
+    assert ta.actor.engine.max_new == rl.max_response_len
+
+
 def test_partial_graph_lifecycle_matches_contract():
     rl = _rl(max_response_len=16, partial_rollout=True)
     tr = PartialRolloutTrainer(TINY, rl, _ds(), budget=6, num_nodes=4,
@@ -323,8 +397,8 @@ def test_partial_graph_lifecycle_matches_contract():
         names = [n for n, _ in st.trace]
         assert names.count("actor_generation") == 1
         for idx, p in tr.partials.items():
-            assert p["ngen"] - prev_ngen.get(idx, 0) <= 6
-        prev_ngen = {idx: p["ngen"] for idx, p in tr.partials.items()}
+            assert p.ngen - prev_ngen.get(idx, 0) <= 6
+        prev_ngen = {idx: p.ngen for idx, p in tr.partials.items()}
     assert pendings[0] == 8
     consumed = tr.dock.controllers["actor_update"].consumed
     assert len(consumed) % rl.num_generations == 0 and len(consumed) > 0

@@ -227,6 +227,126 @@ def test_unsupported_arch_raises():
 
 
 # ---------------------------------------------------------------------------
+# budgeted / mid-sequence requests (partial-rollout backend)
+# ---------------------------------------------------------------------------
+
+def test_run_to_budget_splits_finished_and_resumable(dense_setup):
+    """Requests that exhaust their per-run budget come back resumable with
+    their slots and blocks freed; EOS/cap finishes are reported normally."""
+    cfg, _, params = dense_setup
+    pl = 8
+    prompts = _prompts(3, pl, seed=12)
+    _, cont = _engines(cfg, 16, max_slots=3, block_size=4)
+    r_short = cont.submit(prompts[0], max_new=3, budget=8)   # cap < budget
+    r_a = cont.submit(prompts[1], max_new=16, budget=5)
+    r_b = cont.submit(prompts[2], max_new=16, budget=5)
+    outs, resum = cont.run_to_budget(params)
+    assert [o.rid for o in outs] == [r_short]
+    assert len(outs[0].gen) == 3
+    assert sorted(r.rid for r in resum) == sorted([r_a, r_b])
+    for req in resum:
+        assert req.num_new == 5 and req.slot == -1
+    assert cont.sched.idle and cont.cache.num_free == cont.cache.num_blocks
+    cont.sched.check_invariants()
+
+
+def test_mid_sequence_resume_matches_uninterrupted(dense_setup):
+    """Greedy decode chopped into budget-4 installments (suspend, resubmit
+    mid-sequence with the generated seed) lands on the same tokens as one
+    uninterrupted run — resume is a re-prefill, the same path a recompute
+    preemption takes."""
+    cfg, _, params = dense_setup
+    b, pl, mn = 3, 8, 12
+    prompts = _prompts(b, pl, seed=7)
+    sync, cont = _engines(cfg, mn, max_slots=b, block_size=4)
+    ref = sync.generate(params, prompts, jax.random.PRNGKey(5))
+    pending = {cont.submit(prompts[i], max_new=mn, budget=4): i
+               for i in range(b)}
+    done, rounds = {}, 0
+    while pending:
+        outs, resum = cont.run_to_budget(params)
+        for o in outs:
+            done[pending.pop(o.rid)] = o
+        nxt = {}
+        for req in resum:
+            i = pending.pop(req.rid)
+            nxt[cont.submit(req.prompt, generated=req.generated,
+                            max_new=mn - len(req.generated), budget=4)] = i
+        pending = nxt
+        rounds += 1
+        assert rounds <= 4
+    assert sorted(done) == list(range(b))
+    for i, o in done.items():
+        n = len(o.gen)
+        assert n == ref.lengths[i]
+        np.testing.assert_array_equal(np.asarray(o.gen),
+                                      ref.tokens[i, pl:pl + n])
+
+
+def test_on_finish_never_fires_for_suspensions(dense_setup):
+    cfg, _, params = dense_setup
+    prompts = _prompts(2, 8, seed=13)
+    _, cont = _engines(cfg, 16, max_slots=2, block_size=4)
+    cont.submit(prompts[0], max_new=2, budget=6)
+    cont.submit(prompts[1], max_new=16, budget=6)
+    seen = []
+    outs, resum = cont.run_to_budget(params, on_finish=seen.append)
+    assert [o.rid for o in seen] == [o.rid for o in outs] == [0]
+    assert [r.rid for r in resum] == [1]
+    assert cont._on_finish is None       # restored after the run
+
+
+def test_submit_rejects_bad_budget(dense_setup):
+    cfg, _, _ = dense_setup
+    _, cont = _engines(cfg, 8, max_slots=2, block_size=4)
+    with pytest.raises(ValueError, match="budget"):
+        cont.submit(np.zeros((4,), np.int32), budget=0)
+
+
+def test_drain_refuses_budgeted_requests(dense_setup):
+    """drain() returns finished outputs only — letting it run budgeted
+    requests would strand their suspensions, so it refuses up front."""
+    cfg, _, params = dense_setup
+    _, cont = _engines(cfg, 8, max_slots=2, block_size=4)
+    cont.submit(_prompts(1, 4, seed=14)[0], budget=2)
+    with pytest.raises(RuntimeError, match="run_to_budget"):
+        cont.drain(params)
+
+
+# ---------------------------------------------------------------------------
+# scheduler pressure: tiny pool, preemption firing, invariants every step
+# ---------------------------------------------------------------------------
+
+def test_scheduler_pressure_invariants_and_outputs(dense_setup):
+    """Drive submit/step against a deliberately starved block pool: the
+    recompute preemption must fire, Scheduler.check_invariants() must hold
+    after EVERY step, and every request must eventually finish with the
+    synchronized engine's greedy outputs."""
+    cfg, _, params = dense_setup
+    b, pl, mn = 6, 8, 12
+    prompts = _prompts(b, pl, seed=11)
+    sync, cont = _engines(cfg, mn, max_slots=4, block_size=4,
+                          num_blocks=13, max_seq_len=pl + mn)
+    ref = sync.generate(params, prompts, jax.random.PRNGKey(5))
+    for i in range(b):
+        cont.submit(prompts[i])
+    outs, steps = [], 0
+    while not cont.sched.idle:
+        outs.extend(cont.step(params))
+        cont.sched.check_invariants()
+        steps += 1
+        assert steps < 1000, "scheduler stopped making progress"
+    assert sorted(o.rid for o in outs) == list(range(b))
+    assert sum(o.preemptions for o in outs) > 0, "pool was never starved"
+    for o in outs:
+        n = len(o.gen)
+        assert n == ref.lengths[o.rid]
+        np.testing.assert_array_equal(np.asarray(o.gen),
+                                      ref.tokens[o.rid, pl:pl + n])
+    assert cont.cache.num_free == cont.cache.num_blocks
+
+
+# ---------------------------------------------------------------------------
 # online API + streaming
 # ---------------------------------------------------------------------------
 

@@ -76,4 +76,46 @@ def test_partial_rollout_budget_respected():
     tr = PartialRolloutTrainer(TINY, rl, _ds(), budget=4, num_nodes=4, seed=0)
     tr.iteration(global_batch=2)
     for st in tr.partials.values():
-        assert st["ngen"] <= 4
+        assert st.ngen <= 4
+
+
+def test_partial_iteration_leaves_engine_cap_untouched():
+    """Regression: the old bucket loop clobbered the shared engine's
+    ``max_new`` (eng.max_new = budget), leaking the cap into any other
+    trainer reusing that engine.  Budgets are per request now."""
+    rl = RLConfig(num_generations=2, max_prompt_len=12, max_response_len=16,
+                  lr=1e-4, partial_rollout=True)
+    tr = PartialRolloutTrainer(TINY, rl, _ds(), budget=4, num_nodes=4, seed=0)
+    eng = tr.actor.engine
+    assert eng.max_new == rl.max_response_len
+    tr.iteration(global_batch=2)
+    tr.iteration(global_batch=2)
+    assert eng.max_new == rl.max_response_len
+
+
+def test_partial_budget_clamped_to_response_cap():
+    """Regression: when the budget does not divide max_response_len, resumed
+    sequences used to overshoot the cap (ngen > max_response_len) while the
+    assembled row silently truncated; the per-request max_new = remaining
+    cap clamps each resume."""
+    rl = RLConfig(num_generations=2, max_prompt_len=12, max_response_len=12,
+                  lr=1e-4, partial_rollout=True)
+    tr = PartialRolloutTrainer(TINY, rl, _ds(), budget=8, num_nodes=4, seed=0)
+    for _ in range(3):
+        tr.iteration(global_batch=2)
+        for st in tr.partials.values():
+            assert st.ngen < rl.max_response_len   # cap would have finished it
+    # every assembled row is consistent: the mask counts at most the cap,
+    # and exactly the non-pad response tokens of its row
+    pl, cap = rl.max_prompt_len, rl.max_prompt_len + rl.max_response_len
+    rows = masks = 0
+    for wh in tr.dock.warehouses:
+        for idx, mask in wh.store.get("response_mask", {}).items():
+            n = int(mask.sum())
+            assert n <= rl.max_response_len
+            tok = wh.store["tokens"][idx]
+            assert tok.shape == (cap,) and mask.shape == (cap,)
+            assert (mask[pl:pl + n] == 1.0).all() and mask[pl + n:].sum() == 0
+            masks += 1
+        rows += len(wh.store.get("tokens", {}))
+    assert rows == masks and rows > 0
