@@ -12,20 +12,31 @@ Both paths are warmed up (compile) before timing.  Also asserts the
 acceptance property: under greedy decoding with a uniform budget,
 ``ServingEngine.generate`` reproduces ``RolloutEngine`` token-for-token.
 
-``PYTHONPATH=src python -m benchmarks.bench_serving``
+The second section is the DECODE-PATH A/B: one fused decode step via the old
+dense-gather (``gather_kv`` + dense ``decode`` + row re-extraction — rebuilt
+here as the baseline; the engine no longer contains it) versus the paged
+decode attention the engine now runs, at FIXED live tokens while
+``max_blocks_per_seq`` grows.  Dense-gather cost scales with pool capacity;
+paged cost must stay ~flat.
+
+``PYTHONPATH=src python -m benchmarks.bench_serving [decode]``
+(``decode`` runs only the A/B — the CI smoke step.)
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.rollout import RolloutEngine
+from repro.core.rollout import RolloutEngine, sample_tokens
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.model import build_model
 from repro.serve.engine import ServingEngine
+from repro.serve.paged_cache import PagedKVCache, gather_kv, scatter_token
 
 PL = 16            # prompt length
 SLOTS = 8
@@ -112,8 +123,114 @@ def run(arch: str = "yi-6b"):
           f"{_pct(c_lat, .5) * 1e3:.0f},{_pct(c_lat, .99) * 1e3:.0f}")
     speedup = (c_tok / c_dt) / (s_tok / s_dt)
     print(f"continuous-batching speedup: {speedup:.2f}x tok/s")
+    decode_ab(arch)
     return speedup
 
 
+def _time_step(fn, state, iters: int) -> float:
+    """Median ms over ``iters`` calls of a (pool_k, pool_v)-carrying step."""
+    pool_k, pool_v, rest = state
+    for _ in range(3):                                   # compile + warm
+        pool_k, pool_v, nxt, _ = fn(pool_k, pool_v, *rest)
+        jax.block_until_ready(nxt)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        pool_k, pool_v, nxt, _ = fn(pool_k, pool_v, *rest)
+        jax.block_until_ready(nxt)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e3)
+
+
+def decode_ab(arch: str = "yi-6b", live: int = 48, slots: int = 16,
+              bs: int = 16, mb_list=(4, 8, 16), iters: int = 30) -> float:
+    """Decode-step latency, dense-gather vs paged attention, at ``live``
+    cached tokens per slot while max_blocks_per_seq sweeps ``mb_list``.
+    Returns paged growth factor over the sweep (dense's scales with MB)."""
+    cfg = get_smoke_config(arch).replace(dtype="float32", remat=False)
+    tok = ByteTokenizer()
+    model = build_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    assert live < mb_list[0] * bs, "live tokens must fit the smallest pool"
+
+    # ONE pool size for the whole sweep (only max_blocks_per_seq grows):
+    # keeps the per-step KV scatter cost constant — XLA CPU ignores buffer
+    # donation, so pool-sized copies would otherwise pollute the scaling
+    num_blocks = slots * mb_list[-1]
+
+    def make_state(mb):
+        cache = PagedKVCache(cfg, num_blocks=num_blocks, block_size=bs,
+                             max_blocks_per_seq=mb)
+        # slot i owns blocks [i*max_mb, i*max_mb + mb); random KV in the pool
+        tables = (np.arange(slots, dtype=np.int32)[:, None] * mb_list[-1]
+                  + np.arange(mb, dtype=np.int32)[None, :])
+        k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+        cache.pool_k = jax.random.normal(k1, cache.pool_k.shape,
+                                         cache.pool_k.dtype)
+        cache.pool_v = jax.random.normal(k2, cache.pool_v.shape,
+                                         cache.pool_v.dtype)
+        tok_in = np.full((slots, 1), 7, np.int32)
+        pos = np.full((slots,), live, np.int32)
+        done = np.zeros((slots,), bool)
+        rest = (jnp.asarray(tables), jnp.asarray(tok_in), jnp.asarray(pos),
+                jnp.asarray(done), jax.random.PRNGKey(2))
+        return cache.pool_k, cache.pool_v, rest
+
+    def paged_step(pool_k, pool_v, tables, t, pos, done, key):
+        logits, new_k, new_v = model.decode_paged(
+            params, cfg, pool_k, pool_v, tables, t, pos, block_size=bs)
+        rows = jnp.arange(tables.shape[0])
+        flat = tables[rows, pos // bs] * bs + pos % bs
+        pool_k = scatter_token(pool_k, new_k, flat)
+        pool_v = scatter_token(pool_v, new_v, flat)
+        nxt, lp = sample_tokens(logits, key, temperature=1.0, greedy=True,
+                                done=done, pad_id=tok.pad_id)
+        return pool_k, pool_v, nxt, lp
+
+    def dense_step(pool_k, pool_v, tables, t, pos, done, key):
+        # the retired hot loop: gather the WHOLE pool to a dense per-slot
+        # view, dense decode, re-extract the written rows
+        cache = gather_kv(pool_k, pool_v, tables, bs)
+        logits, cache = model.decode(params, cfg, cache, t, pos)
+        rows = jnp.arange(tables.shape[0])
+        wk = cache["k"][:, rows, pos]
+        wv = cache["v"][:, rows, pos]
+        flat = tables[rows, pos // bs] * bs + pos % bs
+        pool_k = scatter_token(pool_k, wk, flat)
+        pool_v = scatter_token(pool_v, wv, flat)
+        nxt, lp = sample_tokens(logits, key, temperature=1.0, greedy=True,
+                                done=done, pad_id=tok.pad_id)
+        return pool_k, pool_v, nxt, lp
+
+    paged = jax.jit(paged_step, donate_argnums=(0, 1))
+    dense = jax.jit(dense_step, donate_argnums=(0, 1))
+
+    print(f"\ndecode-step A/B ({arch}): {live} live tokens/slot, "
+          f"{slots} slots, block_size {bs}")
+    print("max_blocks_per_seq,capacity_tokens,dense_ms,paged_ms")
+    rows = []
+    for mb in mb_list:
+        d = _time_step(dense, make_state(mb), iters)
+        p = _time_step(paged, make_state(mb), iters)
+        rows.append((mb, d, p))
+        print(f"{mb},{mb * bs},{d:.3f},{p:.3f}")
+    d_growth = rows[-1][1] / rows[0][1]
+    p_growth = rows[-1][2] / rows[0][2]
+    span = mb_list[-1] / mb_list[0]
+    print(f"capacity grew {span:.0f}x: dense-gather step {d_growth:.2f}x, "
+          f"paged step {p_growth:.2f}x (flat is the win)")
+    # CPU timing is noisy; the robust properties are (a) at the largest
+    # capacity the paged step beats the dense gather outright and (b) paged
+    # growth stays well under the capacity span
+    assert rows[-1][2] < rows[-1][1], \
+        "paged decode step slower than the dense gather at max capacity"
+    assert p_growth < span / 2, \
+        "paged decode step scaled with capacity like the dense gather"
+    return p_growth
+
+
 if __name__ == "__main__":
-    run()
+    if "decode" in sys.argv[1:]:
+        decode_ab()
+    else:
+        run()

@@ -6,6 +6,7 @@ written for clarity, not speed.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -85,6 +86,88 @@ def attention(
     p = p / jnp.sum(p, axis=-1, keepdims=True)
     out = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
     return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,
+    k_new: jnp.ndarray,
+    v_new: jnp.ndarray,
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    tables: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    block_size: int,
+    window: int = 0,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """One-token attention straight off the paged KV pool (chunked, exact).
+
+    q:             (S, 1, H, d)  per-slot decode queries (one layer)
+    k_new / v_new: (S, KV, d)    the in-flight token's KV (not yet in the pool)
+    pool_k/pool_v: (R, KV, d)    one layer's row pool (serve/paged_cache.py)
+    tables:        (S, MB) int32 block table; pos: (S,) int32 cached rows.
+
+    Chunked two-pass softmax, NOT online: scores are computed block-by-block
+    (a ``fori_loop`` whose trip count is the number of LIVE blocks, so work
+    scales with cached tokens, not pool capacity), the softmax runs once over
+    the assembled (S, KV, G, MB*bs) score tensor, and the value contraction
+    accumulates one row per step in logical order.  Every float op then has
+    the same shape and reduction order as ``ops.decode_attention`` over the
+    dense-gathered view, which keeps this path BITWISE equal to the dense
+    oracle — the serving engine's bit-compatibility contract with the
+    synchronized ``RolloutEngine`` rides on it (tested).  An online-softmax
+    single-pass (the Pallas kernel's form) would round the rescales
+    differently and break greedy ``gen_logp`` equality.
+
+    Rows at logical position > pos (and outside ``window``, when > 0) are
+    masked to -1e30, exactly like ``_decode_pos_valid``; the in-flight token
+    occupies logical position ``pos`` itself, substituted into its block so
+    the score/value ops see what the dense path sees after cache insertion.
+    """
+    s_, _, h, d = q.shape
+    kv = pool_k.shape[1]
+    g = h // kv
+    mb = tables.shape[1]
+    cap = mb * block_size
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    qg = (q.reshape(s_, kv, g, d) * scale).astype(pool_k.dtype)
+    ar = jnp.arange(cap)
+    valid = ar[None, :] <= pos[:, None]
+    if window > 0:
+        valid &= ar[None, :] > pos[:, None] - window
+    boff = jnp.arange(block_size)
+    nb_live = jnp.max(pos) // block_size + 1    # blocks covering rows 0..pos
+
+    def score_block(bi, sc):
+        tcol = jax.lax.dynamic_index_in_dim(tables, bi, 1, keepdims=False)
+        rows = tcol[:, None] * block_size + boff[None, :]       # (S, bs)
+        kblk = pool_k[rows]                                     # (S,bs,KV,d)
+        is_new = (bi * block_size + boff)[None, :] == pos[:, None]
+        kblk = jnp.where(is_new[..., None, None], k_new[:, None], kblk)
+        sblk = jnp.einsum("bkgd,bskd->bkgs", qg, kblk,
+                          preferred_element_type=jnp.float32)
+        return jax.lax.dynamic_update_slice_in_dim(sc, sblk, bi * block_size,
+                                                   axis=3)
+
+    sc = jax.lax.fori_loop(0, nb_live, score_block,
+                           jnp.full((s_, kv, g, cap), -1e30, jnp.float32))
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    pc = p.astype(pool_v.dtype)
+
+    def value_row(j, acc):
+        tcol = jax.lax.dynamic_index_in_dim(tables, j // block_size, 1,
+                                            keepdims=False)
+        vrow = pool_v[tcol * block_size + j % block_size]       # (S, KV, d)
+        vrow = jnp.where((pos == j)[:, None, None], v_new, vrow)
+        pj = jax.lax.dynamic_slice_in_dim(pc, j, 1, axis=3)[..., 0]
+        return acc + jnp.einsum("bkg,bkd->bkgd", pj, vrow,
+                                preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, jnp.max(pos) + 1, value_row,
+                            jnp.zeros((s_, kv, g, d), jnp.float32))
+    return acc.reshape(s_, 1, h, d).astype(q.dtype)
 
 
 def gmm(

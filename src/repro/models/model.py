@@ -6,6 +6,8 @@
     cache              = m.init_cache(cfg, batch_size, capacity)
     logits, cache      = m.prefill(params, cfg, batch, cache)
     logits, cache      = m.decode(params, cfg, cache, tokens, pos)
+    logits, k1, v1     = m.decode_paged(params, cfg, pool_k, pool_v, tables,
+                                        tokens, pos, block_size=bs)  # serving
 
 ``batch`` is a dict: tokens (B, S) int32, plus family extras —
 vision_embeds (B, P, d) for vlm, frames (B, enc_seq, d) for audio.
@@ -47,6 +49,9 @@ def build_model(cfg: ModelConfig) -> types.SimpleNamespace:
         init_cache=fam.init_cache,
         prefill=fam.prefill,
         decode=fam.decode,
+        # paged-pool decode (serving hot loop) — transformer/moe only; other
+        # families cache recurrent state and never page
+        decode_paged=getattr(fam, "decode_paged", None),
         family=fam,
     )
 

@@ -197,7 +197,8 @@ def forward(params: dict, cfg: ModelConfig, batch: dict):
 init_cache = T.init_cache
 
 
-def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict,
+            last=None):
     x = L.embed_tokens(params, cfg, batch["tokens"])
     b, s, _ = x.shape
     cap = cache["k"].shape[2]
@@ -218,9 +219,40 @@ def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
     if cfg.remat:
         body = jax.checkpoint(body, prevent_cse=False)
     x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
-    x = L.norm_apply(params["ln_f"], cfg, x[:, -1:])
+    xl = x[:, -1:] if last is None else jax.lax.dynamic_slice_in_dim(
+        x, last, 1, axis=1)
+    x = L.norm_apply(params["ln_f"], cfg, xl)
     logits = L.unembed(params, cfg, x)[:, 0].astype(jnp.float32)
     return logits, {"k": ks, "v": vs}
+
+
+def decode_paged(params: dict, cfg: ModelConfig, pool_k: jnp.ndarray,
+                 pool_v: jnp.ndarray, tables: jnp.ndarray,
+                 tokens: jnp.ndarray, pos: jnp.ndarray, *, block_size: int):
+    """One decode step against the paged KV pool — the MoE twin of
+    ``transformer.decode_paged`` (expert FFN instead of the dense MLP).
+    Returns (logits, new_k, new_v); no dense cache view is materialized."""
+    x = L.embed_tokens(params, cfg, tokens)
+    b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    window = T.paged_window(cfg, tables.shape[1] * block_size)
+    cos, sin = L.rope_for(cfg, T._positions(cfg, b, 1, offset=pos[:, None]))
+
+    def body(h, xs):
+        lp, pk, pv = xs
+        y, k1, v1 = L.attn_decode_paged(lp["attn"], cfg,
+                                        L.norm_apply(lp["ln1"], cfg, h),
+                                        cos, sin, pk, pv, tables, pos,
+                                        block_size, window)
+        h = h + y
+        h = h + moe_decode_apply(lp["moe"], cfg,
+                                 L.norm_apply(lp["ln2"], cfg, h))
+        return h, (k1, v1)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], pool_k, pool_v))
+    x = L.norm_apply(params["ln_f"], cfg, x)
+    logits = L.unembed(params, cfg, x)[:, 0].astype(jnp.float32)
+    return logits, ks, vs
 
 
 def decode(params: dict, cfg: ModelConfig, cache: dict, tokens: jnp.ndarray,

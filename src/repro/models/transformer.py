@@ -131,8 +131,15 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> dict:
     }
 
 
-def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
-    """Ingest the prompt; returns (last-token logits, filled cache)."""
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict,
+            last=None):
+    """Ingest the prompt; returns (last-token logits, filled cache).
+
+    ``last`` (traced () int32, optional) selects which position's logits to
+    return instead of the final one — the serving engine's bucketed admission
+    prefill right-pads prompts to a power-of-2 length and needs the logits of
+    the last REAL token (causality keeps rows < ``last`` + their KV
+    bit-identical to an unpadded prefill)."""
     x = _embed_in(params, cfg, batch)
     b, s, _ = x.shape
     cap = cache["k"].shape[2]
@@ -153,9 +160,53 @@ def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict):
     if cfg.remat:
         body = jax.checkpoint(body, prevent_cse=False)
     x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
-    x = L.norm_apply(params["ln_f"], cfg, x[:, -1:])
+    xl = x[:, -1:] if last is None else jax.lax.dynamic_slice_in_dim(
+        x, last, 1, axis=1)
+    x = L.norm_apply(params["ln_f"], cfg, xl)
     logits = L.unembed(params, cfg, x)[:, 0].astype(jnp.float32)
     return logits, {"k": ks, "v": vs}
+
+
+def paged_window(cfg: ModelConfig, cap: int) -> int:
+    """Effective sliding window for a paged decode over a logical capacity of
+    ``cap`` rows — mirrors ``_decode_pos_valid``'s static gate, which only
+    applies the window once the cache could outlive it."""
+    return (cfg.sliding_window
+            if cfg.sliding_window > 0 and cap > cfg.sliding_window else 0)
+
+
+def decode_paged(params: dict, cfg: ModelConfig, pool_k: jnp.ndarray,
+                 pool_v: jnp.ndarray, tables: jnp.ndarray,
+                 tokens: jnp.ndarray, pos: jnp.ndarray, *, block_size: int):
+    """One decode step against the PAGED KV pool (continuous-batching
+    serving).  tokens: (S, 1); pos: (S,) int32 per-slot cached rows;
+    pool_k/pool_v: (n, R, kv, hd) row pools; tables: (S, MB) int32.
+
+    Returns (logits, new_k, new_v) where new_k/new_v (n, S, kv, hd) are this
+    token's KV rows for the engine to scatter into the pool — the model
+    never materializes a dense per-slot cache view (contrast ``decode``,
+    which consumes one; that path remains for the synchronized rollout
+    engine and as the serving bit-compatibility oracle)."""
+    x = L.embed_tokens(params, cfg, tokens)
+    b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    window = paged_window(cfg, tables.shape[1] * block_size)
+    cos, sin = _rope(cfg, _positions(cfg, b, 1, offset=pos[:, None]))
+
+    def body(h, xs):
+        lp, pk, pv = xs
+        y, k1, v1 = L.attn_decode_paged(lp["attn"], cfg,
+                                        L.norm_apply(lp["ln1"], cfg, h),
+                                        cos, sin, pk, pv, tables, pos,
+                                        block_size, window)
+        h = h + y
+        h = h + L.mlp_apply(lp["mlp"], cfg, L.norm_apply(lp["ln2"], cfg, h))
+        return h, (k1, v1)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], pool_k, pool_v))
+    x = L.norm_apply(params["ln_f"], cfg, x)
+    logits = L.unembed(params, cfg, x)[:, 0].astype(jnp.float32)
+    return logits, ks, vs
 
 
 def decode(params: dict, cfg: ModelConfig, cache: dict, tokens: jnp.ndarray,

@@ -24,8 +24,11 @@ Two APIs over one machinery:
 The decode batch is always the full ``(max_slots,)`` slot vector: idle slots
 carry the pad token, position 0, and a block table pointing at the null
 block, so jitted shapes never change and no recompilation happens as
-sequences come and go.  Per-slot depths ride the model zoo's vector-``pos``
-decode path (models/transformer.py, models/moe.py).
+sequences come and go.  Per-slot depths ride the model zoo's paged decode
+path (``decode_paged`` in models/transformer.py, models/moe.py), whose
+attention reads the block tables DIRECTLY (kernels/paged_attention.py on
+TPU, the chunked jnp reference elsewhere) — no dense per-slot cache view is
+gathered, so decode-step cost scales with live tokens, not pool capacity.
 """
 from __future__ import annotations
 
@@ -39,9 +42,20 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.rollout import RolloutResult, sample_tokens
 from repro.models.model import build_model
-from repro.serve.paged_cache import (PagedKVCache, blocks_for, gather_kv,
+from repro.serve.paged_cache import (PagedKVCache, blocks_for,
                                      scatter_prefill, scatter_token)
 from repro.serve.scheduler import Request, Scheduler
+
+
+def prefill_bucket(n: int) -> int:
+    """Admission-prefill length bucket: next power of two (>= 8).  Online
+    ``submit()`` sees arbitrary prompt+seed lengths; bucketing bounds the
+    number of prefill/scatter jit specializations at O(log max_len) instead
+    of one per distinct length."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
 
 
 @dataclass
@@ -128,10 +142,13 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # jitted pieces
     # ------------------------------------------------------------------
-    def _prefill_impl(self, params, batch):
+    def _prefill_impl(self, params, batch, last=None):
+        """``last`` (traced () int32) selects the logits position for
+        bucket-padded admission prefills; None (the batch generate() path)
+        keeps the final position, bit-identical to RolloutEngine."""
         b, s = batch["tokens"].shape
         cache = self.model.init_cache(self.cfg, b, s)
-        return self.model.prefill(params, self.cfg, batch, cache)
+        return self.model.prefill(params, self.cfg, batch, cache, last=last)
 
     def _sample_impl(self, logits, key):
         """First-token sampling — shared arithmetic with RolloutEngine."""
@@ -142,17 +159,24 @@ class ServingEngine:
         """One continuous-batching decode step over the full slot batch.
 
         tables: (S, MB) int32; tok: (S, 1); pos: (S,) — per-slot write
-        position (= current cache length); done: (S,) True on idle slots."""
-        cache = gather_kv(pool_k, pool_v, tables, self.block_size)
-        logits, cache = self.model.decode(params, self.cfg, cache, tok, pos)
+        position (= current cache length); done: (S,) True on idle slots.
+
+        TRUE paged decode: attention reads the block tables directly
+        (kernels/paged_attention.py + kernels/ref.py) and the model returns
+        only this token's per-layer KV rows, which are scattered into the
+        pool — no dense ``(n, S, MB*bs, kv, hd)`` cache view is ever
+        materialized and nothing is re-extracted from one, so step cost
+        scales with LIVE tokens, not pool capacity.  ``gather_kv`` survives
+        only behind ``PagedKVCache.dense_view`` for debugging/oracle use."""
+        logits, new_k, new_v = self.model.decode_paged(
+            params, self.cfg, pool_k, pool_v, tables, tok, pos,
+            block_size=self.block_size)
         s = tables.shape[0]
         rows = jnp.arange(s)
-        wk = cache["k"][:, rows, pos]               # (n, S, kv, hd)
-        wv = cache["v"][:, rows, pos]
         flat = (tables[rows, pos // self.block_size] * self.block_size
                 + pos % self.block_size)            # (S,) — idle -> null block
-        pool_k = scatter_token(pool_k, wk, flat)
-        pool_v = scatter_token(pool_v, wv, flat)
+        pool_k = scatter_token(pool_k, new_k, flat)
+        pool_v = scatter_token(pool_v, new_v, flat)
         nxt, lp = sample_tokens(logits, key, temperature=self.temperature,
                                 greedy=self.greedy, done=done,
                                 pad_id=self.pad_id)
@@ -173,9 +197,10 @@ class ServingEngine:
         the request SUSPEND resumable after that many new tokens — collect
         it from ``run_to_budget``.
 
-        NOTE: admission prefill jit-compiles per distinct prompt length —
-        fine for a demo/few-length workload; a varied-length online server
-        wants masked bucketed prefill (ROADMAP) before this is cheap."""
+        Admission prefill is BUCKETED: prompts are right-padded to the next
+        power-of-2 length (causally inert) so varied-length online traffic
+        compiles O(log max_len) prefill specializations, not one per
+        distinct length."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         max_new = self.max_new if max_new is None else max_new
         if max_new < 1:
@@ -283,19 +308,28 @@ class ServingEngine:
             if req.stash is not None:
                 krows, vrows, tok0, lp0 = req.stash
                 req.stash = None
+                p = krows.shape[1]
+                flat = self._prefill_rows(req.slot, p, p)
             else:
+                # bucketed masked prefill: right-pad to the next power-of-2
+                # length (pads are causally inert — rows < p and their KV are
+                # bit-identical to an unpadded prefill) and read the logits
+                # at the last REAL position; pad rows scatter into the null
+                # block (the write sink), so the whole admission path
+                # compiles once per BUCKET, not once per prompt length.
                 toks = req.refill_tokens
+                p = len(toks)
+                pb = prefill_bucket(p)
+                padded = np.full((pb,), self.pad_id, np.int32)
+                padded[:p] = toks
                 logits, cache = self._prefill(
-                    params, {"tokens": jnp.asarray(toks[None])})
+                    params, {"tokens": jnp.asarray(padded[None])},
+                    jnp.int32(p - 1))
                 krows, vrows = cache["k"][:, 0], cache["v"][:, 0]
                 self._key, k0 = jax.random.split(self._key)
                 t0, l0 = self._sample(logits, k0)
                 tok0, lp0 = int(t0[0]), float(l0[0])
-            p = krows.shape[1]
-            tbl = self.sched.tables[req.slot]
-            j = np.arange(p)
-            flat = jnp.asarray(tbl[j // self.block_size] * self.block_size
-                               + j % self.block_size)
+                flat = self._prefill_rows(req.slot, p, pb)
             self.cache.pool_k = self._write(self.cache.pool_k, krows, flat)
             self.cache.pool_v = self._write(self.cache.pool_v, vrows, flat)
             req.cache_len = p
@@ -304,6 +338,17 @@ class ServingEngine:
             req.generated.append(tok0)
             req.gen_logp.append(lp0)
             self._retire(req, finished)
+
+    def _prefill_rows(self, slot: int, p: int, pb: int) -> jnp.ndarray:
+        """Flat pool rows for a (possibly bucket-padded) prefill write: real
+        rows j < p land at their table-mapped position, pad rows j >= p in
+        the null block (reads of it are always masked)."""
+        tbl = self.sched.tables[slot]
+        j = np.arange(pb)
+        real = tbl[np.minimum(j, p - 1) // self.block_size] * self.block_size \
+            + j % self.block_size
+        sink = self.cache.null_block * self.block_size + j % self.block_size
+        return jnp.asarray(np.where(j < p, real, sink))
 
     def _retire(self, req: Request, finished: list) -> None:
         """Evict the request if its last token ended it: EOS or ``max_new``

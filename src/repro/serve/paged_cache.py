@@ -14,14 +14,24 @@ the attention validity mask — no per-slot branching inside the jitted step.
 
 A slot's logical cache is described by one row of a block table
 ``(max_slots, max_blocks_per_seq) int32``; logical position ``j`` lives at
-flat row ``table[j // bs] * bs + j % bs``.  ``gather_kv`` materializes the
-dense per-slot view the model-zoo ``decode`` consumes — on TPU through a
-Pallas kernel whose grid reads the block table as a scalar-prefetch operand
-(one DMA per block), off-TPU through a pure-JAX advanced-index reference.
+flat row ``table[j // bs] * bs + j % bs``.
+
+The serving DECODE path never materializes a dense per-slot view: attention
+reads the block tables directly (kernels/paged_attention.py — flash-decoding
+Pallas kernel on TPU, chunked bitwise-exact jnp reference elsewhere), so the
+paged cache is a speed win as well as a memory win — decode-step cost scales
+with live tokens, not ``max_blocks_per_seq``.  ``gather_kv`` (Pallas
+block-read kernel + advanced-index reference) survives only behind
+``dense_view()`` as a debugging aid and the bit-compatibility oracle the
+paged kernels are tested against.
+
+The block allocator is O(1): a ``deque`` free list (FIFO, preserving the
+historical allocation order) mirrored by a set for O(1) double-free checks.
 """
 from __future__ import annotations
 
 import functools
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -144,9 +154,10 @@ class PagedKVCache:
         dt = L.cdtype(cfg)
         self.pool_k = jnp.zeros((n, rows, kv, hd), dt)
         self.pool_v = jnp.zeros((n, rows, kv, hd), dt)
-        self._free = list(range(num_blocks))
+        self._free = deque(range(num_blocks))
+        self._free_set = set(self._free)
 
-    # -- allocator ----------------------------------------------------------
+    # -- allocator (O(1): deque pop/push + set membership) ------------------
     @property
     def num_free(self) -> int:
         return len(self._free)
@@ -158,15 +169,19 @@ class PagedKVCache:
             raise OutOfBlocksError(
                 f"KV pool exhausted ({self.num_blocks} blocks of "
                 f"{self.block_size} tokens)")
-        return self._free.pop(0)
+        b = self._free.popleft()
+        self._free_set.discard(b)
+        return b
 
     def free(self, blocks) -> None:
         for b in blocks:
-            assert 0 <= b < self.num_blocks and b not in self._free, b
+            assert 0 <= b < self.num_blocks and b not in self._free_set, b
             self._free.append(b)
+            self._free_set.add(b)
 
     def reset(self) -> None:
-        self._free = list(range(self.num_blocks))
+        self._free = deque(range(self.num_blocks))
+        self._free_set = set(self._free)
         self.pool_k = jnp.zeros_like(self.pool_k)
         self.pool_v = jnp.zeros_like(self.pool_v)
 

@@ -25,6 +25,7 @@ queues); the engine owns all device work.
 """
 from __future__ import annotations
 
+import heapq
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -94,6 +95,8 @@ class Scheduler:
         self.running: dict[int, Request] = {}
         self.tables = np.full((max_slots, self.max_blocks), cache.null_block,
                               np.int32)
+        # min-heap: admission always picks the smallest free slot (same
+        # deterministic order the old sorted-list pop(0) gave, but O(log S))
         self._free_slots = list(range(max_slots))
         self._blocks: dict[int, list[int]] = {s: [] for s in range(max_slots)}
         self._admit_order: list[int] = []   # running slots, oldest first
@@ -137,7 +140,7 @@ class Scheduler:
             if self.cache.num_free < need:
                 break
             self.waiting.popleft()
-            slot = self._free_slots.pop(0)
+            slot = heapq.heappop(self._free_slots)
             blocks = [self.cache.alloc() for _ in range(need)]
             self._blocks[slot] = blocks
             self.tables[slot, :] = self.cache.null_block
@@ -208,8 +211,7 @@ class Scheduler:
         self.tables[slot, :] = self.cache.null_block
         del self.running[slot]
         self._admit_order.remove(slot)
-        self._free_slots.append(slot)
-        self._free_slots.sort()
+        heapq.heappush(self._free_slots, slot)
 
     # -- debugging ----------------------------------------------------------
     def check_invariants(self) -> None:
