@@ -19,8 +19,15 @@ decode attention the engine now runs, at FIXED live tokens while
 ``max_blocks_per_seq`` grows.  Dense-gather cost scales with pool capacity;
 paged cost must stay ~flat.
 
-``PYTHONPATH=src python -m benchmarks.bench_serving [decode]``
-(``decode`` runs only the A/B — the CI smoke step.)
+The third section is the PREFIX-CACHE A/B on a GRPO-shaped workload (N
+rollouts per prompt): admitted-prefill tokens with ref-counted prompt-head
+block sharing on vs off.  Shared must beat unshared by >= 4x on this
+workload; it also smoke-checks the chunked-prefill step budget (no engine
+step spends more than ``prefill_chunk`` prefill tokens even when a
+max-length prompt is admitted mid-decode).
+
+``PYTHONPATH=src python -m benchmarks.bench_serving [decode|prefix]``
+(``decode`` / ``prefix`` run only that A/B — the CI smoke steps.)
 """
 from __future__ import annotations
 
@@ -94,9 +101,14 @@ def run(arch: str = "yi-6b"):
 
     sync = RolloutEngine(cfg, max_new=MAX_NEW, eos_id=tok.eos_id,
                          pad_id=tok.pad_id, greedy=True)
+    # prefix cache OFF here: the timed pass re-submits the warmup's prompts,
+    # and a warm prefix cache would fold its own win into the continuous-
+    # batching number — this section measures eviction/refill alone (the
+    # sharing win is measured by prefix_ab below)
     cont = ServingEngine(cfg, max_new=MAX_NEW, eos_id=tok.eos_id,
                          pad_id=tok.pad_id, greedy=True, max_slots=SLOTS,
-                         block_size=BLOCK, max_seq_len=PL + MAX_NEW)
+                         block_size=BLOCK, max_seq_len=PL + MAX_NEW,
+                         prefix_cache=False)
 
     # -- acceptance property: greedy bit-compatibility -----------------------
     res_a = sync.generate(params, prompts[:SLOTS], jax.random.PRNGKey(7))
@@ -124,6 +136,7 @@ def run(arch: str = "yi-6b"):
     speedup = (c_tok / c_dt) / (s_tok / s_dt)
     print(f"continuous-batching speedup: {speedup:.2f}x tok/s")
     decode_ab(arch)
+    prefix_ab(arch)
     return speedup
 
 
@@ -229,8 +242,70 @@ def decode_ab(arch: str = "yi-6b", live: int = 48, slots: int = 16,
     return p_growth
 
 
+def prefix_ab(arch: str = "yi-6b", groups: int = 4, n: int = 8,
+              pl: int = 33, bs: int = 8, max_new: int = 6,
+              chunk: int = 8) -> float:
+    """Admitted-prefill tokens on a GRPO-shaped workload (``groups`` prompts
+    x ``n`` rollouts each), prefix-cache block sharing ON vs OFF.  With
+    sharing, the block-aligned prompt head is prefilled once per group and
+    every other member prefills only the divergent tail, so the ratio
+    approaches pl / tail.  Also asserts the chunked-prefill step budget: a
+    max-length prompt admitted while slots are mid-decode never pushes one
+    step's prefill work past ``prefill_chunk`` tokens."""
+    cfg = get_smoke_config(arch).replace(dtype="float32", remat=False)
+    tok = ByteTokenizer()
+    model = build_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    prompts = rng.randint(0, 250, (groups, pl)).astype(np.int32)
+
+    def serve(prefix_cache: bool) -> ServingEngine:
+        eng = ServingEngine(cfg, max_new=max_new, eos_id=tok.eos_id,
+                            pad_id=tok.pad_id, greedy=True, max_slots=8,
+                            block_size=bs, max_seq_len=pl + max_new,
+                            prefix_cache=prefix_cache, prefill_chunk=chunk)
+        for g in range(groups):
+            for _ in range(n):
+                eng.submit(prompts[g])
+        eng.drain(params)
+        eng.sched.check_invariants()
+        return eng
+
+    unshared = serve(False)
+    shared = serve(True)
+    ratio = unshared.prefill_tokens / shared.prefill_tokens
+    print(f"\nprefix-cache A/B ({arch}): {groups} prompts x {n} rollouts, "
+          f"PL {pl}, block {bs}, chunk {chunk}")
+    print("mode,admitted_prefill_tokens,shared_rows")
+    print(f"unshared,{unshared.prefill_tokens},0")
+    print(f"shared,{shared.prefill_tokens},{shared.shared_prefill_tokens}")
+    print(f"shared-prompt GRPO workload: {ratio:.1f}x fewer admitted-prefill "
+          f"tokens with block sharing")
+    assert ratio >= 4, \
+        f"prefix sharing saved only {ratio:.1f}x admitted-prefill tokens"
+    assert shared.max_step_prefill <= chunk and \
+        unshared.max_step_prefill <= chunk, "chunk budget exceeded"
+
+    # chunk budget under a max-length admission mid-decode
+    eng = ServingEngine(cfg, max_new=max_new, eos_id=tok.eos_id,
+                        pad_id=tok.pad_id, greedy=True, max_slots=2,
+                        block_size=bs, max_seq_len=pl + max_new,
+                        prefill_chunk=chunk)
+    eng.submit(prompts[0][:8])
+    eng.step(params)                   # short request decoding
+    eng.submit(prompts[1])             # max-length prompt lands mid-decode
+    eng.drain(params)
+    assert eng.max_step_prefill <= chunk, \
+        f"step spent {eng.max_step_prefill} prefill tokens > chunk {chunk}"
+    print(f"max prefill tokens in any step: {eng.max_step_prefill} "
+          f"(budget {chunk})")
+    return ratio
+
+
 if __name__ == "__main__":
     if "decode" in sys.argv[1:]:
         decode_ab()
+    elif "prefix" in sys.argv[1:]:
+        prefix_ab()
     else:
         run()

@@ -1,6 +1,15 @@
 """End-to-end driver: GRPO-train a small model on the pattern rule-reward
 task until the reward climbs (the paper's Figure 8 at CPU scale).
 
+Demonstrates: the full training loop — graph-declared GRPO (or DAPO with
+``--algorithm dapo``) actually LEARNING on the rule-reward task, not just
+executing one iteration.
+
+Expected output: the graph declaration, then one ``[it] reward=... (best
+...) loss=... kl=...`` line per iteration; the first-5 vs last-5 mean
+reward comparison at the end must improve (asserted).  ``--log-json PATH``
+additionally writes the per-iteration dicts.  A few minutes on CPU.
+
     PYTHONPATH=src python examples/grpo_train.py [--iterations 40]
 """
 import argparse

@@ -1,9 +1,20 @@
 """Partial rollout (paper Table 2), serving-backed: long-tail sequences are
 split across iterations by a per-request token budget.  Each iteration the
 generation node submits every pending sequence to the continuous-batching
-``ServingEngine`` — carried-over ones mid-sequence, re-prefilled like a
-preemption refill — and finished samples stream into the transfer dock the
-moment they complete, so downstream stages start before the drain ends.
+``ServingEngine`` — carried-over ones mid-sequence, re-matched against the
+prefix cache and re-prefilled like a preemption refill — and finished
+samples stream into the transfer dock the moment they complete, so
+downstream stages start before the drain ends.
+
+Demonstrates: the budgeted generate/suspend/resume lifecycle across 4
+trainer iterations, the ``complete_groups`` gate holding updates until
+whole GRPO groups exist, and that per-request budgets never touch the
+engine-wide ``max_new`` (asserted).
+
+Expected output: the engine banner, then one ``iter k: pending=... updated
+(groups complete)=... reward=... loss=... decode steps=...`` line per
+iteration — pending counts shrink as budgets accumulate — and the closing
+engine-cap assertion message.  ~2 minutes on CPU.
 
     PYTHONPATH=src python examples/partial_rollout.py
 """

@@ -2,6 +2,15 @@
 the full MindSpeed-RL dataflow (transfer dock + allgather-swap), print what
 moved where.
 
+Demonstrates: the minimal trainer entry point — one ``GRPOTrainer``
+iteration wired through the dock's data+metadata planes and the resharding
+flow, on a CPU smoke config.
+
+Expected output: the arch line, then one block of iteration stats (reward
+mean±std, KL, loss — all finite) and the dispatch-ledger snapshot
+(internode/intranode bytes, per-warehouse load, modeled dispatch time).
+Runs in ~2 minutes on CPU.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax

@@ -2,6 +2,16 @@
 model — naive reshard vs allgather-swap, with the per-device memory timeline
 and the modeled swap durations printed side by side.
 
+Demonstrates: why naive update->generation resharding spikes device memory
+(full-model allgather alongside the resident shard) and how the
+allgather-swap's D2H/H2D staging flattens the peak; ``--paper-two-step``
+runs the literal Figure-5 temp-buffer variant.
+
+Expected output: one ``== naive reshard ==`` / ``== allgather-swap ==``
+block each with a per-phase MB/device memory timeline; naive ends with its
+Eq. 3 redundancy line, allgather-swap with the modeled D2H swap time and a
+bit-exact H2D swap-back verification.  ~1 minute on CPU.
+
     PYTHONPATH=src python examples/reshard_demo.py --arch mixtral-8x7b
 """
 import argparse

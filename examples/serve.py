@@ -2,10 +2,18 @@
 
 Loads (or inits) a model in the GENERATION layout produced by the resharding
 flow, then drives the ``ServingEngine`` like an online server: requests
-arrive over several "ticks", each engine step admits what fits, decodes one
-token for every active slot, and evicts finished sequences immediately —
-freed slots refill from the queue with no batch barrier.  Per-request
-latency / TTFT stats are printed at the end.
+arrive over several "ticks", each engine step admits what fits (prefix-
+matching resident prompt-head blocks), decodes one token for every active
+slot, and evicts finished sequences immediately — freed slots refill from
+the queue with no batch barrier.
+
+Demonstrates: the online ``submit()``/``step()`` API under staggered
+arrivals — admission, refill, and (with ``--blocks``) recompute preemption.
+
+Expected output: the reshard banner, an aggregate line (requests / tokens /
+tok/s / engine steps) with p50/p99 latency, then one row per request —
+rid, prompt -> decoded text, token count, latency, preemption count.
+~1 minute on CPU.
 
     PYTHONPATH=src python examples/serve.py --arch yi-6b
 

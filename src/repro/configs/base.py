@@ -124,6 +124,10 @@ class RLConfig:
     rollout_engine: str = "sync"     # sync (batch RolloutEngine) | serving
     serve_max_slots: int = 8         # continuous-batching slot count
     serve_block_size: int = 16       # paged KV-cache block size (tokens)
+    serve_prefix_cache: bool = True  # ref-counted prompt-head block sharing
+    serve_prefill_chunk: int = 0     # chunked prefill: max prefill tokens
+    #                                  per engine step (0 = whole-prompt
+    #                                  admission prefill, the classic path)
     # --- dataflow (the paper's contribution) ---
     use_transfer_dock: bool = True   # False => centralized replay buffer baseline
     num_warehouses: int = 4          # S, usually = #nodes

@@ -1,8 +1,13 @@
-"""Generation engine (the vLLM-Ascend analogue, JAX-native).
+"""Synchronized batch generation engine (the serving-free baseline).
 
 Batched synchronized decode: one jitted prefill over the padded prompts, then
 a host loop of jitted single-token steps with donated cache (in-place on
 device).  Sampling is temperature/greedy with per-sequence EOS stopping.
+Every sequence in the batch decodes until the SLOWEST finishes — the
+request-level continuous-batching engine (``repro.serve``, the vLLM-Ascend
+analogue) exists to remove exactly that barrier, and under greedy decoding
+it must reproduce this engine's outputs BIT-for-bit, which makes this the
+serving subsystem's correctness oracle.
 
 The engine operates on whatever weight layout ``core/resharding.py`` produced
 for the generation stage — weights and cache are never copied host-side here.

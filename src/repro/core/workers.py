@@ -35,7 +35,9 @@ class ActorWorker:
                 pad_id=pad_id, temperature=rl.temperature,
                 greedy=getattr(rl, "greedy", False),
                 max_slots=rl.serve_max_slots,
-                block_size=rl.serve_block_size)
+                block_size=rl.serve_block_size,
+                prefix_cache=getattr(rl, "serve_prefix_cache", True),
+                prefill_chunk=getattr(rl, "serve_prefill_chunk", 0) or None)
         elif self.engine_kind == "sync":
             self.engine = RolloutEngine(
                 cfg, max_new=rl.max_response_len, eos_id=eos_id,
@@ -64,7 +66,9 @@ class ActorWorker:
     # generation state, budgeted (partial rollout) ----------------------------
     # Resume/stream logic lives in the serving engine, not the trainer: a
     # request is submitted (possibly mid-sequence) with a per-request token
-    # budget, and run_to_budget hands unfinished ones back resumable.
+    # budget, and run_to_budget hands unfinished ones back resumable.  The
+    # engine's prefix cache makes a same-weights resume re-prefill nearly
+    # free (suspended blocks stay indexed until reclaimed).
     def submit(self, prompt, *, max_new=None, budget=None, generated=None):
         self._require_serving("submit")
         return self.engine.submit(prompt, max_new=max_new, budget=budget,

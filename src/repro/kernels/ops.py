@@ -121,15 +121,25 @@ def _flash(q, k, v, causal: bool, window: int, scale: float):
     return out
 
 
-def _flash_fwd_impl(q, k, v, causal, window, scale):
-    """Chunked online-softmax forward.  q:(B,Sq,H,d) k,v:(B,Sk,KV,d)."""
+def _flash_fwd_impl(q, k, v, causal, window, scale, q_pos=None):
+    """Chunked online-softmax forward.  q:(B,Sq,H,d) k,v:(B,Sk,KV,d).
+
+    ``q_pos`` ((Sq,) int32, optional) gives the queries' GLOBAL positions
+    for the causal/window masks; the default keeps the standard convention
+    (q rows are the last Sq of the Sk context).  Chunked prefill passes the
+    chunk's absolute offsets — extra keys this masks out contribute exact
+    zeros to every row's reductions, so a chunk's rows stay bitwise equal to
+    a whole-prompt prefill whenever both contexts fit one kv block
+    (``_pick_block``); beyond that the online-softmax rescan order differs
+    and equality degrades to allclose."""
     b, sq, h, d = q.shape
     _, sk, kv, _ = k.shape
     g = h // kv
     blk = _pick_block(sk)
     nb = sk // blk
     qg = (q.reshape(b, sq, kv, g, d) * scale).astype(jnp.float32)
-    q_pos = jnp.arange(sq) + (sk - sq)
+    if q_pos is None:
+        q_pos = jnp.arange(sq) + (sk - sq)
 
     kb = k.reshape(b, nb, blk, kv, d).swapaxes(0, 1).astype(jnp.float32)
     vb = v.reshape(b, nb, blk, kv, d).swapaxes(0, 1).astype(jnp.float32)
@@ -358,6 +368,46 @@ def decode_attention(q, k_cache, v_cache, valid_mask, *,
     o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)
     return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def chunk_prefill_attention(q, k_new, v_new, pool_k, pool_v, table, start, *,
+                            block_size: int, window: int = 0,
+                            scale: float | None = None) -> jnp.ndarray:
+    """Prefill-CONTINUATION attention for ONE slot over the paged pool —
+    the compute behind chunked prefill and prefix-shared admission.
+
+    q, k_new, v_new: (1, C, H|KV, d) — the chunk's fresh projections, global
+    positions ``start + i`` (pad rows allowed past the real tail; they are
+    causally invisible to real rows and their outputs are discarded);
+    pool_k/pool_v: (R, KV, d) one layer's row pool; table: (MB,) int32 the
+    slot's block-table row; start: () int32 rows already resident (shared
+    prefix blocks and/or earlier chunks).
+
+    Gathers the slot's capacity window (static MB*block_size rows — unlike
+    decode this is NOT the hot loop; admission cost amortizes over the whole
+    sequence), substitutes the chunk's fresh KV at its own rows, and runs
+    the SAME chunked online-softmax forward full prefill uses
+    (``_flash_fwd_impl``) with explicit global q positions.  Keys at
+    logical positions > q_pos (stale rows, null-block rows, chunk pads) are
+    causally masked and contribute exact zeros, which is what keeps a
+    chunk's rows bitwise equal to the whole-prompt prefill on the jnp path
+    (see ``_flash_fwd_impl``; the TPU whole-prefill path runs the Pallas
+    flash kernel instead, where the contract is allclose, not bitwise).
+    """
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(q.shape[-1]))
+    c = q.shape[1]
+    bs = block_size
+    flat = (table[:, None] * bs + jnp.arange(bs)[None, :]).reshape(-1)
+    kw = pool_k[flat]                       # (MB*bs, KV, d)
+    vw = pool_v[flat]
+    idx = start + jnp.arange(c)
+    # pad rows past the window clamp onto nothing ("drop"): they are masked
+    # for every real query anyway
+    kw = kw.at[idx].set(k_new[0], mode="drop")
+    vw = vw.at[idx].set(v_new[0], mode="drop")
+    out, _ = _flash_fwd_impl(q, kw[None], vw[None], True, window, scale,
+                             q_pos=idx)
+    return out
 
 
 def paged_decode_attention(q, k_new, v_new, pool_k, pool_v, tables, pos, *,

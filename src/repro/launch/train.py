@@ -42,6 +42,15 @@ def main() -> None:
                     help="budgeted long-tail generation across iterations "
                          "(runs on the continuous-batching serving engine; "
                          "resume = mid-sequence re-prefill)")
+    ap.add_argument("--rollout-engine", default=None,
+                    choices=["sync", "serving"],
+                    help="generation engine (default: RLConfig default; "
+                    "partial rollout always uses serving)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable serving prefix-cache block sharing")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="serving chunked prefill: max prefill tokens per "
+                    "engine step (0 = whole-prompt admission)")
     ap.add_argument("--rollout-budget", type=int, default=8,
                     help="tokens per sequence per iteration "
                          "(--partial-rollout)")
@@ -80,7 +89,11 @@ def main() -> None:
         stage_fusion=not args.no_stage_fusion,
         partial_rollout=args.partial_rollout,
         num_warehouses=args.num_nodes,
+        serve_prefix_cache=not args.no_prefix_cache,
+        serve_prefill_chunk=args.prefill_chunk,
     )
+    if args.rollout_engine:
+        rl = rl.replace(rollout_engine=args.rollout_engine)
     if args.print_graph:
         # static declaration — no model/optimizer init needed; node ids
         # match the trainer's worker placement for --num-nodes

@@ -154,6 +154,25 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x1: jnp.ndarray, cos1, sin1,
     return attn_project_out(p, y), k[:, 0], v[:, 0]
 
 
+def attn_prefill_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray, cos, sin,
+                       pool_k, pool_v, table, start, block_size: int,
+                       window: int | None = None):
+    """Continuation prefill of one CHUNK for ONE slot against the paged pool
+    (chunked prefill / prefix-shared admission).  x: (1, C, d) chunk hidden
+    states at global positions ``start + i``; pool_k/pool_v: (R, KV, hd) one
+    layer's row pool (read-only here); table: (MB,) int32 the slot's block
+    row; start: () int32 rows already resident.  Returns (out, k, v) like
+    ``attn_prefill`` — the caller scatters k/v into the pool afterwards."""
+    q, k, v = _qkv(p, cfg, x)
+    if cos is not None:
+        q = ops.apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
+        k = ops.apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
+    w = cfg.sliding_window if window is None else window
+    y = ops.chunk_prefill_attention(q, k, v, pool_k, pool_v, table, start,
+                                    block_size=block_size, window=w)
+    return attn_project_out(p, y), k, v
+
+
 def cross_attn_decode(p: dict, cfg: ModelConfig, x1: jnp.ndarray,
                       k_cache, v_cache):
     """Cross-attention decode against a static (encoder) cache."""

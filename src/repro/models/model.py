@@ -8,6 +8,9 @@
     logits, cache      = m.decode(params, cfg, cache, tokens, pos)
     logits, k1, v1     = m.decode_paged(params, cfg, pool_k, pool_v, tables,
                                         tokens, pos, block_size=bs)  # serving
+    logits, ks, vs     = m.prefill_paged(params, cfg, pool_k, pool_v, table,
+                                         tokens, start, block_size=bs,
+                                         last=n)  # serving chunked prefill
 
 ``batch`` is a dict: tokens (B, S) int32, plus family extras —
 vision_embeds (B, P, d) for vlm, frames (B, enc_seq, d) for audio.
@@ -49,9 +52,12 @@ def build_model(cfg: ModelConfig) -> types.SimpleNamespace:
         init_cache=fam.init_cache,
         prefill=fam.prefill,
         decode=fam.decode,
-        # paged-pool decode (serving hot loop) — transformer/moe only; other
-        # families cache recurrent state and never page
+        # paged-pool entry points (serving) — transformer/moe only; other
+        # families cache recurrent state and never page.  decode_paged is
+        # the hot loop; prefill_paged is the chunk-continuation prefill
+        # behind chunked prefill and prefix-shared admission
         decode_paged=getattr(fam, "decode_paged", None),
+        prefill_paged=getattr(fam, "prefill_paged", None),
         family=fam,
     )
 

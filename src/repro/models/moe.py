@@ -226,6 +226,40 @@ def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict,
     return logits, {"k": ks, "v": vs}
 
 
+def prefill_paged(params: dict, cfg: ModelConfig, pool_k: jnp.ndarray,
+                  pool_v: jnp.ndarray, table: jnp.ndarray,
+                  tokens: jnp.ndarray, start, *, block_size: int, last):
+    """Continuation prefill of one chunk — the MoE twin of
+    ``transformer.prefill_paged`` (expert FFN instead of the dense MLP).
+
+    Caveat the dense twin does not have: capacity-based routing groups over
+    the CHUNK length, so per-token expert outputs match a whole-prompt
+    prefill exactly only while no token is capacity-dropped in either
+    grouping (generous ``moe_capacity_factor``, as at smoke scale); routing
+    itself is per-token and unaffected by chunking."""
+    x = L.embed_tokens(params, cfg, tokens)
+    b, c, _ = x.shape
+    start = jnp.asarray(start, jnp.int32)
+    cos, sin = L.rope_for(cfg, T._positions(cfg, b, c, offset=start))
+
+    def body(h, xs):
+        lp, pk, pv = xs
+        y, k1, v1 = L.attn_prefill_paged(lp["attn"], cfg,
+                                         L.norm_apply(lp["ln1"], cfg, h),
+                                         cos, sin, pk, pv, table, start,
+                                         block_size)
+        h = h + y
+        y2, _ = moe_apply(lp["moe"], cfg, L.norm_apply(lp["ln2"], cfg, h))
+        h = h + y2
+        return h, (k1, v1)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], pool_k, pool_v))
+    xl = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+    x = L.norm_apply(params["ln_f"], cfg, xl)
+    logits = L.unembed(params, cfg, x)[:, 0].astype(jnp.float32)
+    return logits, ks[:, 0], vs[:, 0]
+
+
 def decode_paged(params: dict, cfg: ModelConfig, pool_k: jnp.ndarray,
                  pool_v: jnp.ndarray, tables: jnp.ndarray,
                  tokens: jnp.ndarray, pos: jnp.ndarray, *, block_size: int):

@@ -167,6 +167,46 @@ def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict,
     return logits, {"k": ks, "v": vs}
 
 
+def prefill_paged(params: dict, cfg: ModelConfig, pool_k: jnp.ndarray,
+                  pool_v: jnp.ndarray, table: jnp.ndarray,
+                  tokens: jnp.ndarray, start, *, block_size: int, last):
+    """Continuation prefill of one CHUNK for one serving slot.
+
+    tokens: (1, C) the chunk (right-padded to a bucket); start: () int32 —
+    KV rows already resident for this slot (prefix-shared blocks and/or
+    earlier chunks); table: (MB,) int32 the slot's block-table row; ``last``:
+    () int32 — index WITHIN the chunk whose logits to return (the engine
+    only consumes them on the final chunk, to sample the first token).
+
+    Returns (logits (1, V) f32, k_rows (n, C, kv, hd), v_rows) — the caller
+    scatters the chunk's KV rows into the pool, exactly like ``decode_paged``
+    returns one token's rows.  Row content is bitwise identical to the same
+    rows of a whole-prompt ``prefill`` on the jnp attention path (see
+    ``kernels.ops.chunk_prefill_attention``), which is what lets prefix
+    sharing + chunked prefill preserve the serving engine's greedy
+    bit-compatibility with ``RolloutEngine``."""
+    x = _embed_in(params, cfg, {"tokens": tokens})
+    b, c, _ = x.shape
+    start = jnp.asarray(start, jnp.int32)
+    cos, sin = _rope(cfg, _positions(cfg, b, c, offset=start))
+
+    def body(h, xs):
+        lp, pk, pv = xs
+        y, k1, v1 = L.attn_prefill_paged(lp["attn"], cfg,
+                                         L.norm_apply(lp["ln1"], cfg, h),
+                                         cos, sin, pk, pv, table, start,
+                                         block_size)
+        h = h + y
+        h = h + L.mlp_apply(lp["mlp"], cfg, L.norm_apply(lp["ln2"], cfg, h))
+        return h, (k1, v1)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], pool_k, pool_v))
+    xl = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+    x = L.norm_apply(params["ln_f"], cfg, xl)
+    logits = L.unembed(params, cfg, x)[:, 0].astype(jnp.float32)
+    return logits, ks[:, 0], vs[:, 0]
+
+
 def paged_window(cfg: ModelConfig, cap: int) -> int:
     """Effective sliding window for a paged decode over a logical capacity of
     ``cap`` rows — mirrors ``_decode_pos_valid``'s static gate, which only

@@ -1,15 +1,20 @@
 """Continuous-batching serving subsystem (the vLLM-Ascend analogue).
 
   * ``paged_cache``  — block-table paged KV cache over the model zoo's
-    ``init_cache/prefill/decode`` API, with a Pallas gather kernel for block
-    reads and a pure-JAX reference path.
-  * ``scheduler``    — request queue: admission, slot assignment, EOS-driven
-    eviction and refill, and recompute-preemption when blocks run out.
+    ``init_cache/prefill/decode`` API: ref-counted, prefix-indexed blocks
+    (prompt-head sharing) with a Pallas gather kernel for block reads and a
+    pure-JAX reference path.
+  * ``scheduler``    — request queue: prefix-matched admission, slot
+    assignment, EOS-driven eviction and refill, and recompute-preemption
+    when blocks run out.
   * ``engine``       — ``ServingEngine``: online ``submit/step/drain`` (with
-    mid-sequence submission and per-run budgets — ``run_to_budget`` hands
+    mid-sequence submission, per-run budgets — ``run_to_budget`` hands
     budget-exhausted requests back resumable, the backend of partial
-    rollout) plus a ``generate()`` batch API that is a drop-in for
-    ``core.rollout``'s ``RolloutEngine``.
+    rollout — and chunked prefill interleaved with decode) plus a
+    ``generate()`` batch API that is a drop-in for ``core.rollout``'s
+    ``RolloutEngine``.
+
+See docs/serving.md for the block lifecycle and bit-identity contracts.
 """
 from repro.serve.engine import RequestOutput, ServingEngine  # noqa: F401
 from repro.serve.paged_cache import PagedKVCache  # noqa: F401

@@ -29,6 +29,35 @@ path (``decode_paged`` in models/transformer.py, models/moe.py), whose
 attention reads the block tables DIRECTLY (kernels/paged_attention.py on
 TPU, the chunked jnp reference elsewhere) — no dense per-slot cache view is
 gathered, so decode-step cost scales with live tokens, not pool capacity.
+
+Admission is PREFIX-CACHED and (optionally) CHUNKED:
+
+  * ``prefix_cache=True`` (default) — the scheduler matches each request's
+    block-aligned prompt head against resident ref-counted blocks
+    (serve/paged_cache.py) and only the divergent tail is prefilled via the
+    model zoo's ``prefill_paged`` continuation entry; GRPO's N-per-prompt
+    groups prefill the prompt once, and preemption/partial-rollout resumes
+    re-match their own still-indexed blocks.  A NEW params object flushes
+    the index — stale-weights KV is never matched.
+  * ``prefill_chunk=C`` — admission prefill is split into <=C-token chunks
+    interleaved with decode steps: each ``step()`` spends at most C prefill
+    tokens total (``max_step_prefill`` tracks the observed maximum), so a
+    max-length prompt admitted mid-decode never monopolizes a step.
+    Mid-prefill slots ride the fused decode step as idle (tables masked to
+    the null block) until their first token is sampled.
+
+Bit-identity scope (stated precisely, because the suite enforces it):
+``generate()``'s batch path keeps its bitwise contract with
+``RolloutEngine`` (incl. gen_logp) at ANY capacity — stash admissions
+inject the one batched prefill's rows, and a prefix match only elides
+writing identical bits.  The ONLINE path (submit/step, and generate()'s
+preemption refills) is bitwise invariant to sharing and chunk size while
+the slot capacity fits one flash kv-block (``REPRO_ATTN_BLOCK``, 512 rows
+— every test/smoke config); past that the continuation chunk's
+online-softmax block partition differs from whole-prompt prefill's, logits
+agree to allclose rather than bitwise, and greedy equality is token-level
+in practice — the same caveat the PR-4 bucketed admission prefill already
+carried versus the sync engine.  See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -80,6 +109,7 @@ class ServingEngine:
                  pad_id: int, temperature: float = 1.0, greedy: bool = False,
                  max_slots: int = 8, block_size: int = 16,
                  max_seq_len: int | None = None, num_blocks: int | None = None,
+                 prefix_cache: bool = True, prefill_chunk: int | None = None,
                  seed: int = 0):
         if cfg.arch_type not in ("dense", "moe"):
             # ssm/hybrid cache recurrent state (nothing to page); vlm would
@@ -99,6 +129,10 @@ class ServingEngine:
         self.greedy = greedy
         self.max_slots = max_slots
         self.block_size = block_size
+        self.prefix_cache = prefix_cache
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.prefill_chunk = prefill_chunk
         self._num_blocks_req = num_blocks
         self.cache: PagedKVCache | None = None
         self.sched: Scheduler | None = None
@@ -106,10 +140,24 @@ class ServingEngine:
         self._next_rid = 0
         self._on_finish = None
         self._resumable: list[Request] = []  # budget-exhausted, slot freed
+        self._seen_params = None            # weights-era token: a new params
+        #                                     object flushes the prefix index
         self.steps = 0                      # fused decode steps run
+        # admission accounting (the prefix-cache win is measured here):
+        # prefill_tokens = real tokens run through prefill COMPUTE (bucket
+        # pads excluded; the batch generate() path counts its full batched
+        # prefill — a hit there elides pool writes/blocks, not FLOPs);
+        # shared_prefill_tokens = rows satisfied by a prefix match instead
+        # of a fresh prefill (compute savings on the online path, block/
+        # memory savings on the batch path)
+        self.prefill_tokens = 0
+        self.shared_prefill_tokens = 0
+        self.max_step_prefill = 0           # most prefill tokens in one step
+        self._step_prefill = 0
         if max_seq_len is not None:
             self._ensure_state(max_seq_len)
         self._prefill = jax.jit(self._prefill_impl)
+        self._chunk = jax.jit(self._chunk_impl)
         self._sample = jax.jit(self._sample_impl)
         self._step = jax.jit(self._step_impl, donate_argnums=(1, 2))
         self._write = jax.jit(scatter_prefill, donate_argnums=(0,))
@@ -136,7 +184,8 @@ class ServingEngine:
         self.cache = PagedKVCache(self.cfg, num_blocks=num_blocks,
                                   block_size=self.block_size,
                                   max_blocks_per_seq=mb)
-        self.sched = Scheduler(self.cache, self.max_slots)
+        self.sched = Scheduler(self.cache, self.max_slots,
+                               prefix_cache=self.prefix_cache)
         self.sched.waiting.extend(waiting)
 
     # ------------------------------------------------------------------
@@ -154,6 +203,14 @@ class ServingEngine:
         """First-token sampling — shared arithmetic with RolloutEngine."""
         return sample_tokens(logits, key, temperature=self.temperature,
                              greedy=self.greedy)
+
+    def _chunk_impl(self, params, pool_k, pool_v, table, chunk, start, last):
+        """One continuation-prefill chunk for one slot (see
+        ``models.*.prefill_paged``).  Compiles once per chunk BUCKET
+        (``prefill_bucket``), like the whole-prompt admission path."""
+        return self.model.prefill_paged(params, self.cfg, pool_k, pool_v,
+                                        table, chunk, start,
+                                        block_size=self.block_size, last=last)
 
     def _step_impl(self, params, pool_k, pool_v, tables, tok, pos, done, key):
         """One continuous-batching decode step over the full slot batch.
@@ -220,37 +277,86 @@ class ServingEngine:
                                   resume_base=len(seed)))
         return rid
 
+    def flush_prefix(self) -> None:
+        """Drop every cached prefix now.  ``step()`` does this automatically
+        when it sees a NEW params object; call it explicitly if you update
+        weights by mutating the params container in place (object identity
+        cannot see that)."""
+        if self.sched is not None:
+            self.sched.flush_prefix()
+        self._seen_params = None
+
+    @staticmethod
+    def _prefilling(req: Request) -> bool:
+        """True while an admitted request still owes tail-prefill rows (its
+        first token is not sampled yet, so it cannot join the decode batch)."""
+        return req.cache_len < req.prefill_len
+
     def step(self, params) -> list[RequestOutput]:
-        """Admit what fits, run one fused decode step, evict what finished."""
+        """Admit what fits, advance chunked prefills within the per-step
+        token budget, run one fused decode step over the decodable slots,
+        evict what finished.  Mid-prefill slots ride along as idle (their
+        table rows are masked to the null block for the decode write), so a
+        long prompt never monopolizes a step."""
         finished: list[RequestOutput] = []
         if self.sched is None:
             return finished
+        if params is not self._seen_params:
+            # new weights: cached prefixes are stale — never match them.
+            # Weights-era detection is OBJECT IDENTITY on the params pytree:
+            # the trainers pass one stable object per era (jit updates
+            # produce a fresh pytree), so this is exact for every in-repo
+            # caller.  A driver that mutates the params container IN PLACE
+            # must call flush_prefix() itself; one that rebuilds an equal
+            # pytree every step merely flushes the cache into a no-op.
+            if self._seen_params is not None:
+                self.sched.flush_prefix()
+            self._seen_params = params
+        self._step_prefill = 0
         self._admit(params, finished)
+        self._advance_prefills(params, finished)
+        self.max_step_prefill = max(self.max_step_prefill, self._step_prefill)
         self.sched.ensure_capacity()
-        if not self.sched.running:
+        decodable = [slot for slot, req in self.sched.running.items()
+                     if not self._prefilling(req)]
+        if not decodable:
             return finished
         s = self.max_slots
         tok = np.full((s, 1), self.pad_id, np.int32)
         pos = np.zeros((s,), np.int32)
         done = np.ones((s,), bool)
+        tables = self.sched.tables
         for slot, req in self.sched.running.items():
+            if self._prefilling(req):
+                # not decoding this step: route its KV write to the null
+                # block (a real table row would let the pad-token write
+                # clobber row 0 — possibly a SHARED prefix block)
+                tables = tables.copy() if tables is self.sched.tables \
+                    else tables
+                tables[slot, :] = self.cache.null_block
+                continue
             tok[slot, 0] = req.generated[-1]
             pos[slot] = req.cache_len
             done[slot] = False
         self._key, k = jax.random.split(self._key)
         pool_k, pool_v, nxt, lp = self._step(
             params, self.cache.pool_k, self.cache.pool_v,
-            jnp.asarray(self.sched.tables), jnp.asarray(tok),
+            jnp.asarray(tables), jnp.asarray(tok),
             jnp.asarray(pos), jnp.asarray(done), k)
         self.cache.pool_k, self.cache.pool_v = pool_k, pool_v
         self.steps += 1
         nxt = np.asarray(nxt)
         lp = np.asarray(lp)
-        for slot in list(self.sched.running):
+        for slot in decodable:
             req = self.sched.running[slot]
             req.cache_len += 1
             req.generated.append(int(nxt[slot]))
             req.gen_logp.append(float(lp[slot]))
+            if req.cache_len % self.block_size == 0:
+                # a decode-filled block just completed: index it so a
+                # budget-suspended resume (or identical sampled prefix)
+                # re-matches instead of re-prefilling
+                self.sched.register_prefix(req)
             self._retire(req, finished)
         return finished
 
@@ -304,19 +410,41 @@ class ServingEngine:
     # admission / eviction
     # ------------------------------------------------------------------
     def _admit(self, params, finished: list) -> None:
-        for req in self.sched.admit():
+        """Admit queued requests ONE at a time, prefilling (or scheduling
+        the chunked prefill of) each before the next is matched — that
+        ordering is what lets the 2nd..Nth member of a GRPO group admitted
+        in the same step share the 1st member's freshly registered head."""
+        while True:
+            admitted = self.sched.admit(limit=1)
+            if not admitted:
+                return
+            req = admitted[0]
+            matched = req.cache_len            # rows the prefix match covers
+            self.shared_prefill_tokens += matched
             if req.stash is not None:
+                # batch generate() path: rows come from the one batched
+                # prefill; matched rows are already resident (bitwise the
+                # same values) so their writes sink into the null block.
+                # The batched prefill computed ALL p tokens regardless of
+                # the match, so the full p counts as prefill compute — on
+                # this path a hit saves blocks (memory), not FLOPs.
                 krows, vrows, tok0, lp0 = req.stash
                 req.stash = None
                 p = krows.shape[1]
-                flat = self._prefill_rows(req.slot, p, p)
-            else:
-                # bucketed masked prefill: right-pad to the next power-of-2
-                # length (pads are causally inert — rows < p and their KV are
-                # bit-identical to an unpadded prefill) and read the logits
-                # at the last REAL position; pad rows scatter into the null
-                # block (the write sink), so the whole admission path
-                # compiles once per BUCKET, not once per prompt length.
+                self.prefill_tokens += p
+                flat = self._write_rows(req.slot, 0, matched, p, p)
+                self.cache.pool_k = self._write(self.cache.pool_k, krows, flat)
+                self.cache.pool_v = self._write(self.cache.pool_v, vrows, flat)
+                req.cache_len = p
+                self.sched.register_prefix(req)
+                self._first_token(req, tok0, lp0, finished)
+            elif matched == 0 and self.prefill_chunk is None:
+                # whole-prompt bucketed masked prefill: right-pad to the next
+                # power-of-2 length (pads are causally inert — rows < p and
+                # their KV are bit-identical to an unpadded prefill) and read
+                # the logits at the last REAL position; pad rows scatter into
+                # the null block (the write sink), so the whole admission
+                # path compiles once per BUCKET, not once per prompt length.
                 toks = req.refill_tokens
                 p = len(toks)
                 pb = prefill_bucket(p)
@@ -326,29 +454,97 @@ class ServingEngine:
                     params, {"tokens": jnp.asarray(padded[None])},
                     jnp.int32(p - 1))
                 krows, vrows = cache["k"][:, 0], cache["v"][:, 0]
+                self.prefill_tokens += p
+                self._step_prefill += p
+                flat = self._write_rows(req.slot, 0, 0, p, pb)
+                self.cache.pool_k = self._write(self.cache.pool_k, krows, flat)
+                self.cache.pool_v = self._write(self.cache.pool_v, vrows, flat)
+                req.cache_len = p
+                self.sched.register_prefix(req)
                 self._key, k0 = jax.random.split(self._key)
                 t0, l0 = self._sample(logits, k0)
-                tok0, lp0 = int(t0[0]), float(l0[0])
-                flat = self._prefill_rows(req.slot, p, pb)
-            self.cache.pool_k = self._write(self.cache.pool_k, krows, flat)
-            self.cache.pool_v = self._write(self.cache.pool_v, vrows, flat)
-            req.cache_len = p
-            if req.first_token_at < 0:
-                req.first_token_at = time.perf_counter()
-            req.generated.append(tok0)
-            req.gen_logp.append(lp0)
-            self._retire(req, finished)
+                self._first_token(req, int(t0[0]), float(l0[0]), finished)
+            elif self.prefill_chunk is None:
+                # prefix hit, unchunked: one continuation chunk covers the
+                # whole divergent tail (>= 1 token by the match cap)
+                self._run_chunk(params, req, req.prefill_len - matched,
+                                finished)
+            # else: chunked mode — _advance_prefills drives the tail (and,
+            # for a fresh prompt, the whole prefill) under the per-step
+            # token budget; the request sits admitted but not decodable
 
-    def _prefill_rows(self, slot: int, p: int, pb: int) -> jnp.ndarray:
-        """Flat pool rows for a (possibly bucket-padded) prefill write: real
-        rows j < p land at their table-mapped position, pad rows j >= p in
-        the null block (reads of it are always masked)."""
+    def _advance_prefills(self, params, finished: list) -> None:
+        """Chunked-prefill scheduler half-step: spend at most
+        ``prefill_chunk`` prefill tokens across the mid-prefill slots
+        (admission order), so prefill work per engine step is bounded and
+        decode latency for running sequences stays flat."""
+        if self.prefill_chunk is None:
+            return
+        budget = self.prefill_chunk
+        for slot in list(self.sched._admit_order):
+            if budget <= 0:
+                return
+            req = self.sched.running.get(slot)
+            if req is None or not self._prefilling(req):
+                continue
+            take = min(budget, req.prefill_len - req.cache_len)
+            budget -= self._run_chunk(params, req, take, finished)
+
+    def _run_chunk(self, params, req: Request, take: int, finished: list
+                   ) -> int:
+        """One continuation-prefill call: rows [cache_len, cache_len+take)
+        of ``req``'s stream, attending to everything already resident
+        (shared prefix blocks and earlier chunks).  Completing the prefill
+        samples the first token from the final chunk's logits.  Returns the
+        prefill tokens actually spent (rematch may shrink the tail)."""
+        self.shared_prefill_tokens += self.sched.rematch(req)
+        take = min(take, req.prefill_len - req.cache_len)
+        toks = req.refill_tokens
+        start = req.cache_len
+        cb = prefill_bucket(take)
+        chunk = np.full((cb,), self.pad_id, np.int32)
+        chunk[:take] = toks[start:start + take]
+        logits, krows, vrows = self._chunk(
+            params, self.cache.pool_k, self.cache.pool_v,
+            jnp.asarray(self.sched.tables[req.slot]),
+            jnp.asarray(chunk[None]), jnp.int32(start), jnp.int32(take - 1))
+        flat = self._write_rows(req.slot, start, 0, take, cb)
+        self.cache.pool_k = self._write(self.cache.pool_k, krows, flat)
+        self.cache.pool_v = self._write(self.cache.pool_v, vrows, flat)
+        req.cache_len = start + take
+        self.prefill_tokens += take
+        self._step_prefill += take
+        self.sched.register_prefix(req)
+        if not self._prefilling(req):
+            self._key, k0 = jax.random.split(self._key)
+            t0, l0 = self._sample(logits, k0)
+            self._first_token(req, int(t0[0]), float(l0[0]), finished)
+        return take
+
+    def _first_token(self, req: Request, tok0: int, lp0: float,
+                     finished: list) -> None:
+        if req.first_token_at < 0:
+            req.first_token_at = time.perf_counter()
+        req.generated.append(tok0)
+        req.gen_logp.append(lp0)
+        self._retire(req, finished)
+
+    def _write_rows(self, slot: int, base: int, skip: int, take: int,
+                    padded: int) -> jnp.ndarray:
+        """Flat pool rows for a (bucket-padded) prefill write whose row j
+        holds GLOBAL position base+j: rows skip <= j < take land at their
+        table-mapped position; everything else — already-resident
+        prefix-matched rows (j < skip) and bucket pads (j >= take) — sinks
+        into the null block, whose reads are always masked.  One mapping
+        for all three admission writes: whole-prompt (base=0, skip=0),
+        stash (base=0, skip=matched), chunk (base=start, skip=0)."""
         tbl = self.sched.tables[slot]
-        j = np.arange(pb)
-        real = tbl[np.minimum(j, p - 1) // self.block_size] * self.block_size \
-            + j % self.block_size
+        j = np.arange(padded)
+        g = base + np.minimum(j, take - 1)
+        real = tbl[g // self.block_size] * self.block_size \
+            + g % self.block_size
         sink = self.cache.null_block * self.block_size + j % self.block_size
-        return jnp.asarray(np.where(j < p, real, sink))
+        return jnp.asarray(np.where((j >= skip) & (j < take), real, sink))
 
     def _retire(self, req: Request, finished: list) -> None:
         """Evict the request if its last token ended it: EOS or ``max_new``

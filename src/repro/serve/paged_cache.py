@@ -25,16 +25,41 @@ block-read kernel + advanced-index reference) survives only behind
 ``dense_view()`` as a debugging aid and the bit-compatibility oracle the
 paged kernels are tested against.
 
-The block allocator is O(1): a ``deque`` free list (FIFO, preserving the
-historical allocation order) mirrored by a set for O(1) double-free checks.
+Blocks are REF-COUNTED and PREFIX-INDEXED (vLLM's prefix caching, on the
+paper's observation that GRPO's sample flow is maximally redundant at
+admission — every group of N rollouts re-prefills the same prompt, and every
+partial-rollout resume re-prefills a prefix that did not change):
+
+  * ``alloc()`` hands out a block with refcount 1; ``share()`` takes an extra
+    reference on a resident block (a prefix-cache hit); ``free()`` only
+    DECREMENTS — a block returns to the free structure when its refcount
+    hits zero, so N requests can read one prompt-head block concurrently.
+  * ``register(key, block)`` indexes a FULL block under a chained hash of
+    the entire token prefix it caches (``prefix_key``: H(parent_key ||
+    block tokens), O(block) per extension); ``lookup(key)`` is how the
+    scheduler matches a new request's block-aligned prompt head against
+    resident blocks at admission.
+  * A freed block KEEPS its content and index entry (it may be revived by a
+    later ``share()``); the entry is dropped only when ``alloc()`` actually
+    reclaims the block.  Eviction order is least-recently-freed first: the
+    free structure is a ``deque`` (append on free, pop-left on reclaim)
+    mirrored by a set — revival just removes the set entry and ``alloc()``
+    skips the stale deque entry lazily, keeping every operation O(1).
+  * ``flush_index()`` drops ALL index entries (allocations untouched) — the
+    engine calls it when the policy weights change, because cached KV from
+    the previous weights must never satisfy a prefix match under the new
+    ones (partial rollout accepts a mildly off-policy RESUME, not silently
+    stale KV).
 """
 from __future__ import annotations
 
 import functools
+import hashlib
 from collections import deque
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.configs.base import ModelConfig
@@ -44,6 +69,18 @@ from repro.models import layers as L
 
 def blocks_for(ntokens: int, block_size: int) -> int:
     return -(-ntokens // block_size)
+
+
+def prefix_key(parent: bytes, block_tokens) -> bytes:
+    """Chained per-block index key: H(parent_key || this block's token
+    bytes) — vLLM's prefix-hash design.  The chain makes each key O(block)
+    to extend (walking a stream's blocks is O(stream) total, and memoizable
+    per request) while still identifying the ENTIRE prefix; 16-byte blake2b
+    digests make collisions a non-concern next to f32 rollout numerics.
+    The root block's parent is ``b""``."""
+    h = hashlib.blake2b(parent, digest_size=16)
+    h.update(np.ascontiguousarray(block_tokens, dtype=np.int32).tobytes())
+    return h.digest()
 
 
 # ---------------------------------------------------------------------------
@@ -133,10 +170,11 @@ def scatter_prefill(pool: jnp.ndarray, rows: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 class PagedKVCache:
-    """Owns the block pools and the free list.  Layout-compatible with the
-    transformer-family dense cache: gathering a slot's blocks reproduces the
-    ``init_cache``/``prefill`` row content bit-for-bit, which is what makes
-    ``ServingEngine.generate`` bit-compatible with ``RolloutEngine``."""
+    """Owns the block pools, the ref-counted free structure and the prefix
+    index.  Layout-compatible with the transformer-family dense cache:
+    gathering a slot's blocks reproduces the ``init_cache``/``prefill`` row
+    content bit-for-bit, which is what makes ``ServingEngine.generate``
+    bit-compatible with ``RolloutEngine``."""
 
     def __init__(self, cfg: ModelConfig, *, num_blocks: int, block_size: int,
                  max_blocks_per_seq: int):
@@ -154,34 +192,104 @@ class PagedKVCache:
         dt = L.cdtype(cfg)
         self.pool_k = jnp.zeros((n, rows, kv, hd), dt)
         self.pool_v = jnp.zeros((n, rows, kv, hd), dt)
-        self._free = deque(range(num_blocks))
-        self._free_set = set(self._free)
+        self._ref = [0] * num_blocks          # per-block reference counts
+        # ref-0 blocks in eviction order (least-recently freed first).  The
+        # deque holds (block, epoch) entries and may hold STALE ones for
+        # blocks share() revived — each free() bumps the block's epoch, so
+        # alloc() recognizes an entry as live only if it is the block's
+        # NEWEST free (epoch match) and the block is still in the mirror
+        # set.  That keeps eviction order exact under free/revive/free
+        # churn while every operation stays O(1).
+        self._free_epoch = [0] * num_blocks
+        self._free = deque((b, 0) for b in range(num_blocks))
+        self._free_set = set(range(num_blocks))
+        self._index: dict[bytes, int] = {}    # prefix_key -> block
+        self._block_key: dict[int, bytes] = {}  # block -> its index key
 
-    # -- allocator (O(1): deque pop/push + set membership) ------------------
+    # -- allocator (O(1): deque pop/push + set membership + refcounts) ------
     @property
     def num_free(self) -> int:
-        return len(self._free)
+        """Blocks reclaimable right now (refcount 0 — cached content, if
+        any, is evicted the moment ``alloc()`` reclaims them)."""
+        return len(self._free_set)
+
+    def refcount(self, b: int) -> int:
+        return self._ref[b]
 
     def alloc(self) -> int:
-        if not self._free:
-            from repro.serve.scheduler import OutOfBlocksError
+        """Claim a free block (refcount 0 -> 1).  Reclaims in least-recently-
+        freed order; a reclaimed block's prefix-index entry is dropped — its
+        cached content is being overwritten."""
+        while self._free:
+            b, epoch = self._free.popleft()
+            if b not in self._free_set or epoch != self._free_epoch[b]:
+                continue          # stale: revived by share(), or re-freed
+                #                   later (a newer entry sits deeper in the
+                #                   deque at its true eviction position)
+            self._free_set.discard(b)
+            key = self._block_key.pop(b, None)
+            if key is not None:
+                del self._index[key]
+            self._ref[b] = 1
+            return b
+        from repro.serve.scheduler import OutOfBlocksError
 
-            raise OutOfBlocksError(
-                f"KV pool exhausted ({self.num_blocks} blocks of "
-                f"{self.block_size} tokens)")
-        b = self._free.popleft()
-        self._free_set.discard(b)
-        return b
+        raise OutOfBlocksError(
+            f"KV pool exhausted ({self.num_blocks} blocks of "
+            f"{self.block_size} tokens)")
+
+    def share(self, b: int) -> None:
+        """Take one more reference on a resident block (prefix-cache hit).
+        A refcount-0 block is revived out of the free structure — its deque
+        entry goes stale and is skipped lazily by ``alloc()``."""
+        assert 0 <= b < self.num_blocks, b
+        if self._ref[b] == 0:
+            assert b in self._free_set, b
+            self._free_set.discard(b)
+        self._ref[b] += 1
 
     def free(self, blocks) -> None:
+        """Drop one reference per block; a block becomes reclaimable (and
+        evictable) only when its count reaches zero.  Content and index
+        entry are RETAINED so a later admission can still match it."""
         for b in blocks:
-            assert 0 <= b < self.num_blocks and b not in self._free_set, b
-            self._free.append(b)
-            self._free_set.add(b)
+            assert 0 <= b < self.num_blocks and self._ref[b] > 0, b
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                self._free_epoch[b] += 1      # invalidate any stale entry
+                self._free.append((b, self._free_epoch[b]))
+                self._free_set.add(b)
+
+    # -- prefix index -------------------------------------------------------
+    def lookup(self, key: bytes) -> int | None:
+        """Block caching exactly this token prefix, or None.  Any hit is
+        valid to ``share()``: reclaiming is the only way content dies, and
+        reclaiming removes the entry."""
+        return self._index.get(key)
+
+    def register(self, key: bytes, b: int) -> None:
+        """Index a FULL block under its prefix key.  First writer wins: a
+        duplicate key means another slot already caches identical content
+        (same tokens, same weights), so the extra copy stays unindexed."""
+        if key in self._index:
+            return
+        old = self._block_key.get(b)
+        assert old is None or old == key, (b, old, key)
+        self._index[key] = b
+        self._block_key[b] = key
+
+    def flush_index(self) -> None:
+        """Forget every cached prefix (weights changed; allocations keep
+        running on their own rows but are never matched again)."""
+        self._index.clear()
+        self._block_key.clear()
 
     def reset(self) -> None:
-        self._free = deque(range(self.num_blocks))
-        self._free_set = set(self._free)
+        self._ref = [0] * self.num_blocks
+        self._free_epoch = [0] * self.num_blocks
+        self._free = deque((b, 0) for b in range(self.num_blocks))
+        self._free_set = set(range(self.num_blocks))
+        self.flush_index()
         self.pool_k = jnp.zeros_like(self.pool_k)
         self.pool_v = jnp.zeros_like(self.pool_v)
 

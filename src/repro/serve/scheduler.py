@@ -20,6 +20,25 @@ the tokens generated in earlier iterations (``generated`` +
 (``Scheduler.suspend``) and hands it back resumable, to be resubmitted next
 iteration under the then-current weights.
 
+Admission PREFIX-MATCHES before it allocates: the longest chain of
+block-aligned full blocks of the request's prompt head (prompt + seed) that
+is still resident in the cache's prefix index is SHARED (``cache.share``,
+one refcount each) instead of re-prefilled — the request only prefills its
+divergent tail, always at least one token so there are last-token logits to
+sample from.  The engine calls ``register_prefix`` as blocks fill (at
+admission-prefill and at decode block boundaries), so
+
+  * the 2nd..Nth member of a GRPO group prefills the shared prompt once,
+  * a recompute-preemption refill re-matches the victim's own blocks if
+    they were not reclaimed in the meantime, and
+  * a budget-suspended request resumes nearly for free next run — its
+    freed blocks stay indexed until actually evicted.
+
+Shared blocks are copy-on-extend by construction: only FULL, immutable
+prefix blocks are ever indexed/shared, and a sequence's writes (tail
+prefill, decode) land strictly past its matched prefix in freshly
+allocated blocks, so no write ever touches a block another slot reads.
+
 The scheduler is pure host-side bookkeeping (numpy block tables, python
 queues); the engine owns all device work.
 """
@@ -32,7 +51,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.serve.paged_cache import PagedKVCache, blocks_for
+from repro.serve.paged_cache import PagedKVCache, blocks_for, prefix_key
 
 
 class OutOfBlocksError(RuntimeError):
@@ -55,7 +74,24 @@ class Request:
     gen_logp: list = field(default_factory=list)
     resume_base: int = 0
     slot: int = -1
-    cache_len: int = 0                 # KV rows currently in the paged cache
+    cache_len: int = 0                 # VALID KV rows in the paged cache —
+    #                                    seeded with the prefix-matched rows
+    #                                    at admission, grown by the engine's
+    #                                    (chunked) tail prefill, then by one
+    #                                    per decode step
+    prefill_len: int = 0               # admission target: len(prompt + seed);
+    #                                    cache_len < prefill_len => the slot
+    #                                    is still PREFILLING (no decode)
+    shared_rows: int = 0               # rows satisfied by prefix match at the
+    #                                    latest admission (stats/tests)
+    registered: int = 0                # full blocks already in the prefix
+    #                                    index (-1: never register — stale
+    #                                    weights era, see flush_prefix)
+    key_chain: list = field(default_factory=list)  # chained prefix keys per
+    #                                    full block of prompt+generated;
+    #                                    append-only (the stream's prefix
+    #                                    never changes), so it survives
+    #                                    preemption and re-admission
     preemptions: int = 0
     first_token_at: float = -1.0
     finished_at: float = -1.0
@@ -86,11 +122,13 @@ class Request:
 class Scheduler:
     """Slot + block bookkeeping for the serving engine."""
 
-    def __init__(self, cache: PagedKVCache, max_slots: int):
+    def __init__(self, cache: PagedKVCache, max_slots: int,
+                 prefix_cache: bool = True):
         self.cache = cache
         self.max_slots = max_slots
         self.block_size = cache.block_size
         self.max_blocks = cache.max_blocks_per_seq
+        self.prefix_cache = prefix_cache
         self.waiting: deque[Request] = deque()
         self.running: dict[int, Request] = {}
         self.tables = np.full((max_slots, self.max_blocks), cache.null_block,
@@ -100,6 +138,7 @@ class Scheduler:
         self._free_slots = list(range(max_slots))
         self._blocks: dict[int, list[int]] = {s: [] for s in range(max_slots)}
         self._admit_order: list[int] = []   # running slots, oldest first
+        self.shared_rows_total = 0          # prefix-matched rows, lifetime
 
     # -- queue --------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -129,28 +168,128 @@ class Scheduler:
         return not self.waiting and not self.running
 
     # -- admission ----------------------------------------------------------
-    def admit(self) -> list[Request]:
+    def _block_key(self, req: Request, i: int, toks: np.ndarray) -> bytes:
+        """Chained prefix key of full block ``i`` of ``toks``, memoized on
+        the request (the stream's prefix is append-only, so the chain stays
+        valid across preemptions, suspends and growth)."""
+        bs = self.block_size
+        chain = req.key_chain
+        while len(chain) <= i:
+            j = len(chain)
+            chain.append(prefix_key(chain[j - 1] if j else b"",
+                                    toks[j * bs:(j + 1) * bs]))
+        return chain[i]
+
+    def _match(self, req: Request, toks: np.ndarray) -> list[int]:
+        """Longest chain of indexed full blocks covering a block-aligned
+        head of ``toks``, capped so at least ONE token is left to prefill
+        (the tail prefill's last-token logits seed sampling)."""
+        if not self.prefix_cache:
+            return []
+        chain: list[int] = []
+        for i in range((len(toks) - 1) // self.block_size):
+            b = self.cache.lookup(self._block_key(req, i, toks))
+            if b is None:
+                break
+            chain.append(b)
+        return chain
+
+    def admit(self, limit: int | None = None) -> list[Request]:
         """Move queued requests into free slots while both a slot and enough
         blocks for their prefill (+1 decode write) exist.  FIFO — the head
-        blocks the queue (no head-of-line skipping, keeps latency fair)."""
+        blocks the queue (no head-of-line skipping, keeps latency fair).
+
+        Each admission first prefix-matches the request's prompt head
+        (prompt + seed) against the cache index: matched blocks are SHARED
+        (refcount +1 each, reviving freed-but-cached ones) and only the
+        remainder is freshly allocated, with ``cache_len`` seeded to the
+        matched rows so the engine prefills the tail alone.  The engine
+        admits one request at a time (``limit=1``) and registers its blocks
+        before the next admission, so even two group members admitted in the
+        same step share the head."""
         admitted = []
-        while self.waiting and self._free_slots:
+        while self.waiting and self._free_slots and (
+                limit is None or len(admitted) < limit):
             req = self.waiting[0]
-            need = blocks_for(len(req.refill_tokens) + 1, self.block_size)
-            if self.cache.num_free < need:
+            toks = req.refill_tokens
+            need = blocks_for(len(toks) + 1, self.block_size)
+            shared = self._match(req, toks)
+            revive = sum(1 for b in shared if self.cache.refcount(b) == 0)
+            if self.cache.num_free - revive < need - len(shared):
                 break
             self.waiting.popleft()
             slot = heapq.heappop(self._free_slots)
-            blocks = [self.cache.alloc() for _ in range(need)]
+            for b in shared:
+                self.cache.share(b)
+            blocks = shared + [self.cache.alloc()
+                               for _ in range(need - len(shared))]
             self._blocks[slot] = blocks
             self.tables[slot, :] = self.cache.null_block
             self.tables[slot, :need] = blocks
             req.slot = slot
-            req.cache_len = 0          # engine sets it after the KV write
+            req.cache_len = len(shared) * self.block_size
+            req.prefill_len = len(toks)
+            req.shared_rows = req.cache_len
+            req.registered = len(shared)    # matched blocks already indexed
+            self.shared_rows_total += req.cache_len
             self.running[slot] = req
             self._admit_order.append(slot)
             admitted.append(req)
         return admitted
+
+    def rematch(self, req: Request) -> int:
+        """Upgrade a request's prefix match just before its FIRST tail chunk
+        runs (chunked prefill admits a whole wave before any prefill
+        executes, so a group member admitted alongside the group head finds
+        the head's blocks only now).  Extra matched blocks replace the
+        request's own fresh allocations for the same rows — those are
+        unwritten and unindexed, so they simply return to the free
+        structure.  Returns the newly shared row count."""
+        if (not self.prefix_cache or req.slot < 0 or req.registered < 0
+                or req.cache_len != req.shared_rows):
+            return 0                       # tail already started: rows final
+        bs = self.block_size
+        have = req.cache_len // bs
+        chain = self._match(req, req.refill_tokens)
+        if len(chain) <= have:
+            return 0
+        blocks = self._blocks[req.slot]
+        for i in range(have, len(chain)):
+            self.cache.share(chain[i])
+            self.cache.free([blocks[i]])
+            blocks[i] = chain[i]
+            self.tables[req.slot, i] = chain[i]
+        gained = (len(chain) - have) * bs
+        req.cache_len = len(chain) * bs
+        req.shared_rows = req.cache_len
+        req.registered = max(req.registered, len(chain))
+        self.shared_rows_total += gained
+        return gained
+
+    def register_prefix(self, req: Request) -> None:
+        """Index every newly-FULL block of ``req``'s stream (prompt + all
+        generated so far) so later admissions — group members, preemption
+        refills, partial-rollout resumes — can share it.  Called by the
+        engine after each tail-prefill write and at decode block
+        boundaries, always BEFORE the blocks could be freed."""
+        if not self.prefix_cache or req.slot < 0 or req.registered < 0:
+            return
+        bs = self.block_size
+        toks = req.refill_tokens           # rows [0, cache_len) cache these
+        nfull = min(req.cache_len, len(toks)) // bs
+        blocks = self._blocks[req.slot]
+        for i in range(req.registered, nfull):
+            self.cache.register(self._block_key(req, i, toks), blocks[i])
+        req.registered = max(req.registered, nfull)
+
+    def flush_prefix(self) -> None:
+        """Invalidate the prefix index (the engine saw new weights): resident
+        KV no longer matches what a fresh prefill would write.  Allocations
+        are untouched — running requests keep decoding on their own rows,
+        but they are never matched or re-registered again."""
+        self.cache.flush_index()
+        for req in self.running.values():
+            req.registered = -1
 
     # -- growth / preemption ------------------------------------------------
     def ensure_capacity(self) -> list[Request]:
@@ -182,6 +321,9 @@ class Scheduler:
         req.preemptions += 1
         req.slot = -1
         req.cache_len = 0
+        req.prefill_len = 0
+        req.shared_rows = 0
+        req.registered = 0
         req.stash = None               # KV dropped -> recompute on readmission
         self.waiting.appendleft(req)   # resume FIRST (cf. partial rollout)
         return req
@@ -197,11 +339,17 @@ class Scheduler:
         """Evict a request that exhausted its per-run ``budget`` without
         finishing: slot and KV blocks are freed NOW; the caller owns the
         request and may resubmit it mid-sequence later (re-prefill, like a
-        recompute preemption — but across engine runs, not within one)."""
+        recompute preemption — but across engine runs, not within one).
+        The freed blocks KEEP their prefix-index entries until actually
+        reclaimed, so a resume within the same weights era re-matches them
+        and the re-prefill is nearly free."""
         req = self.running[slot]
         self._release(slot)
         req.slot = -1
         req.cache_len = 0
+        req.prefill_len = 0
+        req.shared_rows = 0
+        req.registered = 0
         req.stash = None
         return req
 
@@ -215,14 +363,26 @@ class Scheduler:
 
     # -- debugging ----------------------------------------------------------
     def check_invariants(self) -> None:
-        owned = [b for s in range(self.max_slots) for b in self._blocks[s]]
-        assert len(owned) == len(set(owned)), "block double-assignment"
-        assert not (set(owned) & set(self.cache._free)), "owned block in free list"
-        assert len(owned) + self.cache.num_free == self.cache.num_blocks, \
-            "block leak"
+        cache = self.cache
+        owned: dict[int, int] = {}
+        for s in range(self.max_slots):
+            for b in self._blocks[s]:
+                owned[b] = owned.get(b, 0) + 1
+        for b in range(cache.num_blocks):
+            assert cache.refcount(b) == owned.get(b, 0), \
+                f"block {b}: refcount {cache.refcount(b)} != " \
+                f"{owned.get(b, 0)} slot references"
+        assert not (set(owned) & cache._free_set), "owned block in free set"
+        assert len(owned) + cache.num_free == cache.num_blocks, "block leak"
         assert sorted(self.running) == sorted(self._admit_order)
         for slot, req in self.running.items():
             assert len(self._blocks[slot]) >= blocks_for(
                 max(req.cache_len, 1), self.block_size)
             for j, b in enumerate(self._blocks[slot]):
                 assert self.tables[slot, j] == b
+        # prefix index: entries point only at RESIDENT blocks (owned or
+        # freed-but-cached), and the two maps mirror each other
+        for key, b in cache._index.items():
+            assert cache._block_key.get(b) == key, (b, key)
+            assert cache.refcount(b) > 0 or b in cache._free_set, \
+                f"indexed block {b} neither referenced nor free-cached"
