@@ -135,9 +135,28 @@ def run(arch: str = "yi-6b"):
           f"{_pct(c_lat, .5) * 1e3:.0f},{_pct(c_lat, .99) * 1e3:.0f}")
     speedup = (c_tok / c_dt) / (s_tok / s_dt)
     print(f"continuous-batching speedup: {speedup:.2f}x tok/s")
-    decode_ab(arch)
-    prefix_ab(arch)
-    return speedup
+    p_growth = decode_ab(arch)
+    prefix_ratio = prefix_ab(arch)
+    # machine-readable artifact (benchmarks.run writes BENCH_serving.json);
+    # engine counters come from the metrics registry so the artifact and
+    # the stdout table cannot drift apart
+    st = cont.stats()
+    return {
+        "tok_s": c_tok / c_dt,
+        "sync_tok_s": s_tok / s_dt,
+        "speedup_vs_sync": speedup,
+        "latency_p50_s": _pct(c_lat, .5),
+        "latency_p99_s": _pct(c_lat, .99),
+        "ttft_p50_s": st["ttft_s"].get("p50", 0.0),
+        "ttft_p95_s": st["ttft_s"].get("p95", 0.0),
+        "steps": st["steps"],
+        "prefill_tokens": st["prefill_tokens"],
+        "shared_prefill_tokens": st["shared_prefill_tokens"],
+        "decode_tokens": st["decode_tokens"],
+        "preemptions": st["preemptions"],
+        "decode_paged_growth": p_growth,
+        "prefix_cache_ratio": prefix_ratio,
+    }
 
 
 def _time_step(fn, state, iters: int) -> float:

@@ -94,11 +94,13 @@ def main():
     dt = time.perf_counter() - t0
 
     new_tokens = sum(len(o.gen) for o in outs)
-    lats = sorted(o.latency_s for o in outs)
-    print(f"\nserved {len(outs)} requests / {new_tokens} tokens in {dt:.2f}s "
-          f"({new_tokens / dt:.1f} tok/s) over {engine.steps} engine steps")
-    print(f"latency p50 {lats[len(lats) // 2] * 1e3:.0f} ms, "
-          f"p99 {lats[-1] * 1e3:.0f} ms")
+    st = engine.stats()     # registry-backed counters + latency percentiles
+    print(f"\nserved {st['finished']} requests / {new_tokens} tokens in "
+          f"{dt:.2f}s ({new_tokens / dt:.1f} tok/s) over {st['steps']} "
+          f"engine steps")
+    print(f"latency p50 {st['latency_s']['p50'] * 1e3:.0f} ms, "
+          f"p99 {st['latency_s']['p99'] * 1e3:.0f} ms; "
+          f"ttft p50 {st['ttft_s']['p50'] * 1e3:.0f} ms")
     for o in sorted(outs, key=lambda o: o.rid):
         txt = tok.decode(o.gen)
         pre = f" ({o.preemptions} preemptions)" if o.preemptions else ""

@@ -139,6 +139,10 @@ class RLConfig:
     #     50 GB/s H2D/D2H) ---
     internode_bw: float = 300e6
     h2d_bw: float = 50e9
+    # --- observability (repro.obs) ---
+    trace_path: Optional[str] = None  # write a Chrome-trace/Perfetto JSON
+    #                                  here (train.py --trace); None disables
+    #                                  tracing (registry metrics stay on)
 
     def replace(self, **kw) -> "RLConfig":
         return dataclasses.replace(self, **kw)

@@ -75,6 +75,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
 from repro.core.resharding import ReshardLedger
+from repro.obs import get_tracer
 
 LAYOUTS = ("generation", "update")
 TIMINGS = ("gen", "infer", "update")
@@ -237,10 +238,14 @@ class GraphExecutor:
     partial rollout are three declarations over the same engine.
     """
 
-    def __init__(self, dock, rl):
+    def __init__(self, dock, rl, tracer=None):
         self.dock = dock
         self.rl = rl
         self.lock = threading.RLock()
+        # every dispatch emits one `stage.<node>` span (cat "graph") carrying
+        # node id, sample idxs and fused-round membership — the rich form of
+        # the (node, idxs) tuples GraphRun.trace keeps for bit-identity tests
+        self.tracer = tracer if tracer is not None else get_tracer()
 
     # -- thread-safe dock access -------------------------------------------
     def put(self, node: StageNode, fld: str, idxs, rows) -> None:
@@ -274,6 +279,10 @@ class GraphExecutor:
     def _ensure_layout(self, ctx, want: str) -> None:
         if want == self._layout:
             return
+        with self.tracer.span(f"reshard.to_{want}", cat="reshard"):
+            self._do_reshard(ctx, want)
+
+    def _do_reshard(self, ctx, want: str) -> None:
         if want == "generation":
             gen, stash, led = ctx.resharder.to_generation(ctx.params)
             ctx.params = None     # paper semantics: update buffers off-device
@@ -296,19 +305,32 @@ class GraphExecutor:
         self._layout = want
 
     # -- dispatch -----------------------------------------------------------
-    def _dispatch(self, node: StageNode, idxs, ctx) -> None:
-        ins = self._fetch(node, idxs)
-        io = StageIO(node, idxs, ins, self)
-        out = node.fn(ctx, io)
-        if out:
-            for fld, rows in out.items():
-                self.put(node, fld, io.idxs, rows)
-        with self.lock:
-            if io.consumed:
-                self.dock.mark_consumed(node.name, io.consumed)
-            run = self._run
-            run.counts[node.name] = (run.counts.get(node.name, 0)
-                                     + len(io.consumed))
+    def _dispatch(self, node: StageNode, idxs, ctx, *, round_: int = 0,
+                  fused: bool = False, stream: bool = False) -> None:
+        """One stage dispatch.  ``round_`` is the executor round that
+        scheduled it, ``fused`` whether it shared the round with other
+        nodes (concurrent dispatch), ``stream`` whether it was started by
+        the streaming poll while a generation stage drained — together the
+        span records the fused-round membership the bare trace tuple
+        cannot express."""
+        span_args = {"node": node.name, "cluster_node": node.node,
+                     "samples": len(idxs),
+                     "idxs": [int(i) for i in idxs],
+                     "round": round_, "fused": fused, "stream": stream}
+        with self.tracer.span(f"stage.{node.name}", cat="graph",
+                              args=span_args):
+            ins = self._fetch(node, idxs)
+            io = StageIO(node, idxs, ins, self)
+            out = node.fn(ctx, io)
+            if out:
+                for fld, rows in out.items():
+                    self.put(node, fld, io.idxs, rows)
+            with self.lock:
+                if io.consumed:
+                    self.dock.mark_consumed(node.name, io.consumed)
+                run = self._run
+                run.counts[node.name] = (run.counts.get(node.name, 0)
+                                         + len(io.consumed))
 
     def _streaming(self, ctx, graph: RLGraph) -> bool:
         actor = getattr(ctx, "actor", None)
@@ -337,7 +359,8 @@ class GraphExecutor:
                 continue
             seen.add(key)
             self._run.trace.append((node.name, tuple(idxs)))
-            self._dispatch(node, idxs, ctx)
+            self._dispatch(node, idxs, ctx, round_=self._run.rounds,
+                           fused=True, stream=True)
             progressed = True
         return progressed
 
@@ -420,12 +443,14 @@ class GraphExecutor:
                 # Table 2 speedup Eq. 5 throughput should see), attributed
                 # to the round's leading timing bucket
                 t0 = time.perf_counter()
+                fused = len(batch) > 1
                 if (want == "generation" and self._streaming(ctx, graph)):
                     # generation drains in a worker thread; the scheduler
                     # thread polls the metadata plane and starts stream
                     # nodes at sample granularity as on_finish puts land
                     with ThreadPoolExecutor(max_workers=len(batch)) as ex:
-                        futs = [ex.submit(self._dispatch, n, i, ctx)
+                        futs = [ex.submit(self._dispatch, n, i, ctx,
+                                          round_=run.rounds, fused=True)
                                 for n, i in batch]
                         while not all(f.done() for f in futs):
                             if not self._poll_stream(graph, ctx, expected,
@@ -433,17 +458,19 @@ class GraphExecutor:
                                 time.sleep(0.001)
                         for f in futs:
                             f.result()
-                elif len(batch) > 1 and self.rl.stage_fusion:
+                elif fused and self.rl.stage_fusion:
                     # stage fusion as a scheduling property: independent
                     # ready nodes run concurrently (paper Table 2)
                     with ThreadPoolExecutor(max_workers=len(batch)) as ex:
-                        futs = [ex.submit(self._dispatch, n, i, ctx)
+                        futs = [ex.submit(self._dispatch, n, i, ctx,
+                                          round_=run.rounds, fused=True)
                                 for n, i in batch]
                         for f in futs:
                             f.result()
                 else:
                     for node, idxs in batch:
-                        self._dispatch(node, idxs, ctx)
+                        self._dispatch(node, idxs, ctx, round_=run.rounds,
+                                       fused=fused)
                 run.stage_times[batch[0][0].timing] += (
                     time.perf_counter() - t0)
         finally:

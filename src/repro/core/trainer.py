@@ -32,6 +32,7 @@ from repro.data.prompts import PromptDataset
 from repro.data.tokenizer import ByteTokenizer
 from repro.launch.mesh import make_local_mesh
 from repro.models.model import build_model
+from repro.obs import Tracer, get_tracer
 from repro.optim import adamw_init
 from repro.sharding import param_specs
 
@@ -97,7 +98,7 @@ class GRPOTrainer:
 
     def __init__(self, cfg: ModelConfig, rl: RLConfig, dataset: PromptDataset,
                  *, num_nodes: int = 4, microbatch: int = 0, seed: int = 0,
-                 mesh=None):
+                 mesh=None, tracer=None):
         assert cfg.vocab_size >= ByteTokenizer.vocab_size
         if rl.partial_rollout and self.clear_dock_each_iteration:
             # the flag is honored by the PartialRolloutTrainer graph (which
@@ -112,6 +113,12 @@ class GRPOTrainer:
         self.key = jax.random.PRNGKey(seed)
         self.tok = dataset.tok
         self.microbatch = microbatch
+        # one tracer serves every instrumented layer (executor spans, dock
+        # counter events, serving-engine steps): injected > rl.trace_path
+        # (fresh enabled tracer) > the disabled process default
+        self.tracer = tracer if tracer is not None else (
+            Tracer(enabled=True) if rl.trace_path else get_tracer())
+        self._iters_run = 0
 
         # --- model / optimizer state -----------------------------------
         model = build_model(cfg)
@@ -136,17 +143,19 @@ class GRPOTrainer:
         # --- workers + graph + dock --------------------------------------
         self.actor = ActorWorker(cfg, rl, eos_id=self.tok.eos_id,
                                  pad_id=self.tok.pad_id, node=0,
-                                 engine=self.actor_engine_kind)
+                                 engine=self.actor_engine_kind,
+                                 tracer=self.tracer)
         self.ref = ReferenceWorker(cfg, self.ref_params, node=1 % num_nodes)
         self.reward = RewardWorker(dataset, node=2 % num_nodes)
         self.graph = self._build_graph()
-        ledger = DispatchLedger(internode_bw=rl.internode_bw)
+        ledger = DispatchLedger(internode_bw=rl.internode_bw,
+                                tracer=self.tracer)
         if rl.use_transfer_dock:
             self.dock = TransferDock(min(rl.num_warehouses, num_nodes),
                                      self.graph.states(), ledger)
         else:
             self.dock = CentralReplayBuffer(self.graph.states(), ledger)
-        self.executor = GraphExecutor(self.dock, rl)
+        self.executor = GraphExecutor(self.dock, rl, tracer=self.tracer)
         self.last_run = None
 
     def _build_graph(self) -> RLGraph:
@@ -241,9 +250,20 @@ class GRPOTrainer:
             self.dock.clear()
         expected = self._enqueue(global_batch)
         self._it = {"losses": [], "kls": [], "reward_by_idx": {}}
-        run = self.executor.run(self.graph, self, expected=expected)
+        with self.tracer.span("iteration", cat="train",
+                              args={"iteration": self._iters_run,
+                                    "global_batch": global_batch}):
+            run = self.executor.run(self.graph, self, expected=expected)
+        self._iters_run += 1
         self.last_run = run
         return self._stats(run)
+
+    def export_trace(self, path: str | None = None) -> str:
+        """Dump the tracer's Chrome-trace JSON (openable in Perfetto)."""
+        path = path or self.rl.trace_path
+        if path is None:
+            raise ValueError("no trace path: pass one or set rl.trace_path")
+        return self.tracer.export(path)
 
     def _stats(self, run) -> IterationStats:
         it = self._it

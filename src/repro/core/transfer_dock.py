@@ -31,6 +31,13 @@ META_PER_SAMPLE = 3        # sample idx, warehouse idx, ready bitmap
 
 @dataclass
 class DispatchLedger:
+    """Byte/message accounting for the sample flow, with an optional tracer:
+    when one is attached and enabled, every ``record``/``record_meta``
+    becomes a cumulative counter sample (``dock.bytes`` tagged intranode vs
+    internode, ``dock.metadata``) on the same timeline as the stage spans
+    that caused the traffic — the dispatch-cost half of the paper's
+    accounting claim, visible in Perfetto next to the compute it serves."""
+
     internode_bytes: int = 0
     intranode_bytes: int = 0
     metadata_bytes: int = 0
@@ -39,6 +46,7 @@ class DispatchLedger:
     internode_bw: float = 300e6
     metadata_latency: float = 1e-4     # per metadata round-trip (Ray-like RPC)
     per_node_bytes: dict = field(default_factory=dict)  # warehouse-node load
+    tracer: object = None              # repro.obs.Tracer | None
 
     def record(self, nbytes: int, cross: bool, node: int = 0):
         if cross:
@@ -48,10 +56,36 @@ class DispatchLedger:
         else:
             self.intranode_bytes += nbytes
         self.requests += 1
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.counter("dock.bytes", {"internode": self.internode_bytes,
+                                      "intranode": self.intranode_bytes},
+                       cat="dock")
 
     def record_meta(self, nbytes: int, msgs: int = 1):
+        """Metadata-plane accounting.  ``nbytes`` always accumulates;
+        ``msgs`` counts only LATENCY-BEARING messages — round-trips that
+        cross a process/RPC boundary and therefore pay
+        ``metadata_latency`` in ``simulated_dispatch_time``.  The two
+        in-repo semantics (pinned by tests/test_obs.py):
+
+          * PUT — the warehouse broadcasts readiness to all controllers
+            (paper step 3): one message per controller, ``msgs=nctl``.
+          * GET/metadata request — ``TransferDock`` co-locates each
+            controller with its worker, so the request is intranode and
+            FREE latency-wise (``msgs=0``, bytes still counted); the
+            ``CentralReplayBuffer`` baseline's single controller sits on
+            node 0, so every request is a real RPC (``msgs=1``).
+
+        That asymmetry IS the paper's metadata-locality argument — do not
+        "fix" it by counting intranode requests as messages."""
         self.metadata_bytes += nbytes
         self.metadata_msgs += msgs
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.counter("dock.metadata", {"bytes": self.metadata_bytes,
+                                         "msgs": self.metadata_msgs},
+                       cat="dock")
 
     @property
     def simulated_dispatch_time(self) -> float:
@@ -186,8 +220,9 @@ class TransferDock:
     # -- metadata plane -----------------------------------------------------
     def request_metadata(self, state: str, fields, limit: int | None = None):
         ctl = self.controllers[state]
-        # controller co-located with worker: metadata request is intranode,
-        # but still a message (counted; zero internode bytes)
+        # controller co-located with worker: the request's bytes are counted
+        # but it is intranode, so it bears no RPC latency — msgs=0 (see
+        # DispatchLedger.record_meta for the put-vs-get msgs contract)
         self.ledger.record_meta(META_PER_SAMPLE * META_SCALAR_BYTES, msgs=0)
         return ctl.available(fields, limit)
 

@@ -21,7 +21,8 @@ class ActorWorker:
     """Owns the policy weights; generation/inference/update states."""
 
     def __init__(self, cfg: ModelConfig, rl: RLConfig, *, eos_id: int,
-                 pad_id: int, node: int = 0, engine: str | None = None):
+                 pad_id: int, node: int = 0, engine: str | None = None,
+                 tracer=None):
         self.cfg = cfg
         self.rl = rl
         self.node = node
@@ -37,7 +38,8 @@ class ActorWorker:
                 max_slots=rl.serve_max_slots,
                 block_size=rl.serve_block_size,
                 prefix_cache=getattr(rl, "serve_prefix_cache", True),
-                prefill_chunk=getattr(rl, "serve_prefill_chunk", 0) or None)
+                prefill_chunk=getattr(rl, "serve_prefill_chunk", 0) or None,
+                tracer=tracer)
         elif self.engine_kind == "sync":
             self.engine = RolloutEngine(
                 cfg, max_new=rl.max_response_len, eos_id=eos_id,

@@ -59,6 +59,10 @@ def main() -> None:
     ap.add_argument("--task", default="pattern",
                     choices=["pattern", "arithmetic"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                    "(stage spans, serving steps, dock byte counters) — "
+                    "open at ui.perfetto.dev; see docs/observability.md")
     ap.add_argument("--log-json", default=None)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--resume", default=None,
@@ -94,6 +98,8 @@ def main() -> None:
     )
     if args.rollout_engine:
         rl = rl.replace(rollout_engine=args.rollout_engine)
+    if args.trace:
+        rl = rl.replace(trace_path=args.trace)
     if args.print_graph:
         # static declaration — no model/optimizer init needed; node ids
         # match the trainer's worker placement for --num-nodes
@@ -144,6 +150,9 @@ def main() -> None:
     if args.log_json:
         with open(args.log_json, "w") as f:
             json.dump(log, f, indent=1)
+    if args.trace:
+        print(f"wrote trace to {trainer.export_trace()} "
+              f"(open at https://ui.perfetto.dev)")
     if args.checkpoint:
         save_pytree(args.checkpoint, trainer.params, step=args.iterations)
         print(f"saved checkpoint to {args.checkpoint}")

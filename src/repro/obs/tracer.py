@@ -1,0 +1,151 @@
+"""Structured tracer with a Chrome-trace / Perfetto JSON exporter.
+
+Event model (a subset of the Trace Event Format that Perfetto renders):
+
+  * span    — a named interval (``ph: "X"`` complete event, ``ts`` + ``dur``
+    in microseconds).  Recorded when the span EXITS, so nested spans appear
+    after their children in the raw list; the exporter sorts by ``ts``,
+    which restores timeline order (Perfetto reconstructs nesting from
+    interval containment per track).
+  * instant — a point event (``ph: "i"``, thread scope).
+  * counter — a sampled multi-series value (``ph: "C"``); Perfetto draws
+    each distinct counter name as its own track with one line per series.
+
+Clock: ``time.perf_counter_ns`` relative to the tracer's construction, so
+``ts`` is monotonic, immune to wall-clock steps, and starts near zero
+(Perfetto's viewport opens on the data).  ``pid`` is always 0 (one-process
+system); ``tid`` is a small dense alias of the Python thread ident, assigned
+in first-use order so the main thread is track 0.
+
+Disabled mode is the contract the serving hot loop relies on: ``span()``
+returns a module-level singleton null context (no allocation), ``instant``/
+``counter`` return before touching any state, and nothing is ever appended —
+``tests/test_obs.py`` pins all three properties with a counting probe.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+
+class _NullSpan:
+    """Singleton no-op context manager returned by a disabled tracer."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """Live span: times its ``with`` body and records one complete event."""
+    __slots__ = ("_tr", "name", "cat", "args", "_t0")
+
+    def __init__(self, tr: "Tracer", name: str, cat: str, args):
+        self._tr = tr
+        self.name = name
+        self.cat = cat
+        self.args = args           # caller may still mutate before __exit__
+        self._t0 = 0.0
+
+    def __enter__(self):
+        self._t0 = self._tr._now()
+        return self
+
+    def __exit__(self, *exc):
+        tr = self._tr
+        tr._append({"name": self.name, "cat": self.cat, "ph": "X",
+                    "ts": self._t0, "dur": tr._now() - self._t0,
+                    "pid": 0, "tid": tr._tid(),
+                    "args": self.args if self.args is not None else {}})
+        return False
+
+
+class Tracer:
+    """Process-local structured event log (spans / instants / counters)."""
+
+    def __init__(self, enabled: bool = False):
+        self.enabled = enabled
+        self._events: list[dict] = []
+        self._lock = threading.Lock()
+        self._epoch_ns = time.perf_counter_ns()
+        self._tids: dict[int, int] = {}
+
+    # -- clock / identity ---------------------------------------------------
+    def _now(self) -> float:
+        """Microseconds since tracer construction (monotonic)."""
+        return (time.perf_counter_ns() - self._epoch_ns) / 1e3
+
+    def _tid(self) -> int:
+        ident = threading.get_ident()
+        tid = self._tids.get(ident)
+        if tid is None:
+            with self._lock:
+                tid = self._tids.setdefault(ident, len(self._tids))
+        return tid
+
+    def _append(self, ev: dict) -> None:
+        with self._lock:
+            self._events.append(ev)
+
+    # -- control ------------------------------------------------------------
+    def enable(self) -> None:
+        self.enabled = True
+
+    def disable(self) -> None:
+        self.enabled = False
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+
+    @property
+    def events(self) -> list[dict]:
+        """Snapshot copy of the raw event list (append order)."""
+        with self._lock:
+            return list(self._events)
+
+    # -- emission -----------------------------------------------------------
+    def span(self, name: str, cat: str = "repro", args: dict | None = None):
+        """Context manager timing its body as one complete event.  Disabled:
+        returns the singleton ``NULL_SPAN`` — no allocation, no event."""
+        if not self.enabled:
+            return NULL_SPAN
+        return _Span(self, name, cat, args)
+
+    def instant(self, name: str, cat: str = "repro",
+                args: dict | None = None) -> None:
+        if not self.enabled:
+            return
+        self._append({"name": name, "cat": cat, "ph": "i", "s": "t",
+                      "ts": self._now(), "pid": 0, "tid": self._tid(),
+                      "args": args or {}})
+
+    def counter(self, name: str, values: dict, cat: str = "repro") -> None:
+        """One sample of a (multi-series) counter track.  ``values`` maps
+        series name -> number; pass CUMULATIVE values so the track reads as
+        a running total (Perfetto shows deltas on hover)."""
+        if not self.enabled:
+            return
+        self._append({"name": name, "cat": cat, "ph": "C",
+                      "ts": self._now(), "pid": 0, "tid": self._tid(),
+                      "args": dict(values)})
+
+    # -- export -------------------------------------------------------------
+    def to_chrome(self) -> dict:
+        """Chrome-trace JSON object: events sorted by ``ts`` (monotone), as
+        chrome://tracing and https://ui.perfetto.dev both ingest."""
+        evs = sorted(self.events, key=lambda e: e["ts"])
+        return {"traceEvents": evs, "displayTimeUnit": "ms"}
+
+    def export(self, path: str) -> str:
+        """Write the Chrome-trace JSON to ``path`` and return ``path``."""
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)
+        return path

@@ -71,6 +71,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.rollout import RolloutResult, sample_tokens
 from repro.models.model import build_model
+from repro.obs import MetricsRegistry, get_tracer
 from repro.serve.paged_cache import (PagedKVCache, blocks_for,
                                      scatter_prefill, scatter_token)
 from repro.serve.scheduler import Request, Scheduler
@@ -110,7 +111,7 @@ class ServingEngine:
                  max_slots: int = 8, block_size: int = 16,
                  max_seq_len: int | None = None, num_blocks: int | None = None,
                  prefix_cache: bool = True, prefill_chunk: int | None = None,
-                 seed: int = 0):
+                 seed: int = 0, tracer=None):
         if cfg.arch_type not in ("dense", "moe"):
             # ssm/hybrid cache recurrent state (nothing to page); vlm would
             # need per-request vision_embeds carried through preemption
@@ -142,17 +143,19 @@ class ServingEngine:
         self._resumable: list[Request] = []  # budget-exhausted, slot freed
         self._seen_params = None            # weights-era token: a new params
         #                                     object flushes the prefix index
-        self.steps = 0                      # fused decode steps run
-        # admission accounting (the prefix-cache win is measured here):
-        # prefill_tokens = real tokens run through prefill COMPUTE (bucket
-        # pads excluded; the batch generate() path counts its full batched
-        # prefill — a hit there elides pool writes/blocks, not FLOPs);
-        # shared_prefill_tokens = rows satisfied by a prefix match instead
-        # of a fresh prefill (compute savings on the online path, block/
-        # memory savings on the batch path)
-        self.prefill_tokens = 0
-        self.shared_prefill_tokens = 0
-        self.max_step_prefill = 0           # most prefill tokens in one step
+        # telemetry (repro.obs): the registry is ALWAYS on (aggregate
+        # counters/histograms — engine.stats() and the bench artifacts read
+        # it); the tracer defaults to the disabled process tracer, whose
+        # calls are no-ops in the hot loop.  Counter catalog (exact names
+        # documented in docs/observability.md):
+        #   serve.prefill_tokens = real tokens run through prefill COMPUTE
+        #   (bucket pads excluded; the batch generate() path counts its full
+        #   batched prefill — a hit there elides pool writes/blocks, not
+        #   FLOPs); serve.shared_prefill_tokens = rows satisfied by a prefix
+        #   match instead of a fresh prefill (compute savings on the online
+        #   path, block/memory savings on the batch path)
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.metrics = MetricsRegistry()
         self._step_prefill = 0
         if max_seq_len is not None:
             self._ensure_state(max_seq_len)
@@ -185,8 +188,53 @@ class ServingEngine:
                                   block_size=self.block_size,
                                   max_blocks_per_seq=mb)
         self.sched = Scheduler(self.cache, self.max_slots,
-                               prefix_cache=self.prefix_cache)
+                               prefix_cache=self.prefix_cache,
+                               tracer=self.tracer)
         self.sched.waiting.extend(waiting)
+
+    # ------------------------------------------------------------------
+    # telemetry views (registry-backed; names in docs/observability.md)
+    # ------------------------------------------------------------------
+    @property
+    def steps(self) -> int:
+        """Fused decode steps run."""
+        return self.metrics.value("serve.steps")
+
+    @property
+    def prefill_tokens(self) -> int:
+        return self.metrics.value("serve.prefill_tokens")
+
+    @property
+    def shared_prefill_tokens(self) -> int:
+        return self.metrics.value("serve.shared_prefill_tokens")
+
+    @property
+    def max_step_prefill(self) -> int:
+        """Most prefill tokens any single step spent (chunk-budget bound)."""
+        return int(self.metrics.value("serve.max_step_prefill"))
+
+    def stats(self) -> dict:
+        """Aggregate serving summary: request counts, token counters, and
+        nearest-rank percentile summaries of per-request TTFT (submit ->
+        first token) and e2e latency (submit -> finish), both derived from
+        the ``Request`` ``submitted_at``/``first_token_at``/``finished_at``
+        perf-counter stamps at finish time.  THE latency summary — consumers
+        (examples/serve.py, bench artifacts) read this instead of computing
+        their own percentiles."""
+        m = self.metrics
+        return {
+            "submitted": m.value("serve.submitted"),
+            "finished": m.value("serve.finished"),
+            "suspended": m.value("serve.suspended"),
+            "preemptions": m.value("serve.preemptions"),
+            "steps": m.value("serve.steps"),
+            "prefill_tokens": m.value("serve.prefill_tokens"),
+            "shared_prefill_tokens": m.value("serve.shared_prefill_tokens"),
+            "decode_tokens": m.value("serve.decode_tokens"),
+            "max_step_prefill": int(m.value("serve.max_step_prefill")),
+            "ttft_s": m.summarize("serve.ttft_s"),
+            "latency_s": m.summarize("serve.latency_s"),
+        }
 
     # ------------------------------------------------------------------
     # jitted pieces
@@ -275,6 +323,7 @@ class ServingEngine:
                                   budget=budget, generated=seed,
                                   gen_logp=[0.0] * len(seed),
                                   resume_base=len(seed)))
+        self.metrics.inc("serve.submitted")
         return rid
 
     def flush_prefix(self) -> None:
@@ -297,7 +346,36 @@ class ServingEngine:
         token budget, run one fused decode step over the decodable slots,
         evict what finished.  Mid-prefill slots ride along as idle (their
         table rows are masked to the null block for the decode write), so a
-        long prompt never monopolizes a step."""
+        long prompt never monopolizes a step.
+
+        When the tracer is enabled, every step emits one ``serve.step`` span
+        plus ``serve.tokens`` / ``serve.slots`` counter samples; disabled,
+        this wrapper is a single predicate check on top of the hot loop."""
+        tr = self.tracer
+        if not tr.enabled:
+            return self._step_once(params)
+        m = self.metrics
+        with tr.span("serve.step", cat="serve", args=(args := {})):
+            finished = self._step_once(params)
+            args.update({
+                "step": m.value("serve.steps"),
+                "live_slots": self.sched.num_running if self.sched else 0,
+                "waiting": self.sched.num_pending if self.sched else 0,
+                "prefill_tokens": self._step_prefill,
+                "finished": len(finished)})
+        tr.counter("serve.tokens",
+                   {"prefill": m.value("serve.prefill_tokens"),
+                    "shared_prefill": m.value("serve.shared_prefill_tokens"),
+                    "decode": m.value("serve.decode_tokens")}, cat="serve")
+        tr.counter("serve.slots",
+                   {"running": self.sched.num_running if self.sched else 0,
+                    "waiting": self.sched.num_pending if self.sched else 0,
+                    "preemptions": m.value("serve.preemptions"),
+                    "prefix_hit_rows": m.value(
+                        "serve.shared_prefill_tokens")}, cat="serve")
+        return finished
+
+    def _step_once(self, params) -> list[RequestOutput]:
         finished: list[RequestOutput] = []
         if self.sched is None:
             return finished
@@ -315,8 +393,10 @@ class ServingEngine:
         self._step_prefill = 0
         self._admit(params, finished)
         self._advance_prefills(params, finished)
-        self.max_step_prefill = max(self.max_step_prefill, self._step_prefill)
-        self.sched.ensure_capacity()
+        self.metrics.set_max("serve.max_step_prefill", self._step_prefill)
+        preempted = self.sched.ensure_capacity()
+        if preempted:
+            self.metrics.inc("serve.preemptions", len(preempted))
         decodable = [slot for slot, req in self.sched.running.items()
                      if not self._prefilling(req)]
         if not decodable:
@@ -344,7 +424,8 @@ class ServingEngine:
             jnp.asarray(tables), jnp.asarray(tok),
             jnp.asarray(pos), jnp.asarray(done), k)
         self.cache.pool_k, self.cache.pool_v = pool_k, pool_v
-        self.steps += 1
+        self.metrics.inc("serve.steps")
+        self.metrics.inc("serve.decode_tokens", len(decodable))
         nxt = np.asarray(nxt)
         lp = np.asarray(lp)
         for slot in decodable:
@@ -420,7 +501,7 @@ class ServingEngine:
                 return
             req = admitted[0]
             matched = req.cache_len            # rows the prefix match covers
-            self.shared_prefill_tokens += matched
+            self.metrics.inc("serve.shared_prefill_tokens", matched)
             if req.stash is not None:
                 # batch generate() path: rows come from the one batched
                 # prefill; matched rows are already resident (bitwise the
@@ -431,7 +512,7 @@ class ServingEngine:
                 krows, vrows, tok0, lp0 = req.stash
                 req.stash = None
                 p = krows.shape[1]
-                self.prefill_tokens += p
+                self.metrics.inc("serve.prefill_tokens", p)
                 flat = self._write_rows(req.slot, 0, matched, p, p)
                 self.cache.pool_k = self._write(self.cache.pool_k, krows, flat)
                 self.cache.pool_v = self._write(self.cache.pool_v, vrows, flat)
@@ -454,7 +535,7 @@ class ServingEngine:
                     params, {"tokens": jnp.asarray(padded[None])},
                     jnp.int32(p - 1))
                 krows, vrows = cache["k"][:, 0], cache["v"][:, 0]
-                self.prefill_tokens += p
+                self.metrics.inc("serve.prefill_tokens", p)
                 self._step_prefill += p
                 flat = self._write_rows(req.slot, 0, 0, p, pb)
                 self.cache.pool_k = self._write(self.cache.pool_k, krows, flat)
@@ -497,7 +578,8 @@ class ServingEngine:
         (shared prefix blocks and earlier chunks).  Completing the prefill
         samples the first token from the final chunk's logits.  Returns the
         prefill tokens actually spent (rematch may shrink the tail)."""
-        self.shared_prefill_tokens += self.sched.rematch(req)
+        self.metrics.inc("serve.shared_prefill_tokens",
+                         self.sched.rematch(req))
         take = min(take, req.prefill_len - req.cache_len)
         toks = req.refill_tokens
         start = req.cache_len
@@ -512,7 +594,7 @@ class ServingEngine:
         self.cache.pool_k = self._write(self.cache.pool_k, krows, flat)
         self.cache.pool_v = self._write(self.cache.pool_v, vrows, flat)
         req.cache_len = start + take
-        self.prefill_tokens += take
+        self.metrics.inc("serve.prefill_tokens", take)
         self._step_prefill += take
         self.sched.register_prefix(req)
         if not self._prefilling(req):
@@ -556,6 +638,7 @@ class ServingEngine:
             self._finish(req.slot, finished)
         elif req.budget is not None and req.num_new >= req.budget:
             self._resumable.append(self.sched.suspend(req.slot))
+            self.metrics.inc("serve.suspended")
 
     def _finish(self, slot: int, finished: list) -> None:
         req = self.sched.finish(slot)
@@ -566,6 +649,9 @@ class ServingEngine:
             latency_s=req.finished_at - req.submitted_at,
             ttft_s=max(req.first_token_at - req.submitted_at, 0.0),
             preemptions=req.preemptions)
+        self.metrics.inc("serve.finished")
+        self.metrics.observe("serve.ttft_s", out.ttft_s)
+        self.metrics.observe("serve.latency_s", out.latency_s)
         finished.append(out)
         if self._on_finish is not None:
             self._on_finish(out)

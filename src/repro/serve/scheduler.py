@@ -51,6 +51,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.obs import get_tracer
 from repro.serve.paged_cache import PagedKVCache, blocks_for, prefix_key
 
 
@@ -123,9 +124,13 @@ class Scheduler:
     """Slot + block bookkeeping for the serving engine."""
 
     def __init__(self, cache: PagedKVCache, max_slots: int,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, tracer=None):
         self.cache = cache
         self.max_slots = max_slots
+        # lifecycle instants (serve.admit / serve.preempt / serve.suspend /
+        # serve.finish) land on the same timeline as the engine's step spans;
+        # a disabled tracer makes every emission a no-op
+        self.tracer = tracer if tracer is not None else get_tracer()
         self.block_size = cache.block_size
         self.max_blocks = cache.max_blocks_per_seq
         self.prefix_cache = prefix_cache
@@ -235,6 +240,11 @@ class Scheduler:
             self.running[slot] = req
             self._admit_order.append(slot)
             admitted.append(req)
+            if self.tracer.enabled:
+                self.tracer.instant("serve.admit", cat="serve", args={
+                    "rid": req.rid, "slot": slot,
+                    "prefill_len": req.prefill_len,
+                    "shared_rows": req.shared_rows})
         return admitted
 
     def rematch(self, req: Request) -> int:
@@ -317,6 +327,9 @@ class Scheduler:
 
     def _preempt(self, slot: int) -> Request:
         req = self.running[slot]
+        if self.tracer.enabled:
+            self.tracer.instant("serve.preempt", cat="serve", args={
+                "rid": req.rid, "slot": slot, "cache_len": req.cache_len})
         self._release(slot)
         req.preemptions += 1
         req.slot = -1
@@ -331,6 +344,11 @@ class Scheduler:
     # -- eviction -----------------------------------------------------------
     def finish(self, slot: int) -> Request:
         req = self.running[slot]
+        if self.tracer.enabled:
+            self.tracer.instant("serve.finish", cat="serve", args={
+                "rid": req.rid, "slot": slot,
+                "new_tokens": req.num_new,
+                "preemptions": req.preemptions})
         self._release(slot)
         req.finished_at = time.perf_counter()
         return req
@@ -344,6 +362,9 @@ class Scheduler:
         reclaimed, so a resume within the same weights era re-matches them
         and the re-prefill is nearly free."""
         req = self.running[slot]
+        if self.tracer.enabled:
+            self.tracer.instant("serve.suspend", cat="serve", args={
+                "rid": req.rid, "slot": slot, "new_tokens": req.num_new})
         self._release(slot)
         req.slot = -1
         req.cache_len = 0

@@ -32,6 +32,18 @@ CI_EXECUTED = [
     "benchmarks.bench_dispatch",
     "benchmarks.bench_partial_stream",
     "benchmarks.bench_serving",
+    "benchmarks.run",                  # bench-artifacts step (BENCH_*.json)
+]
+
+# scripts CI must both execute and document (same agreement contract)
+CI_SCRIPTS = [
+    "tools/trace_report.py",           # trace-smoke step (Perfetto export)
+]
+
+# docs that must exist by name (load-bearing: other checks reference them)
+REQUIRED_DOCS = [
+    "docs/ARCHITECTURE.md",
+    "docs/observability.md",
 ]
 
 
@@ -93,15 +105,25 @@ def check_ci_agreement() -> list[str]:
         if mod not in docs and mod.replace(".", "/") not in docs:
             errors.append(f"CI executes `python -m {mod}` but no doc "
                           f"mentions it")
+    for script in CI_SCRIPTS:
+        if script not in ci:
+            errors.append(f"ci.yml no longer executes documented script "
+                          f"`python {script}`")
+        if script not in docs:
+            errors.append(f"CI executes `python {script}` but no doc "
+                          f"mentions it")
     return errors
 
 
 def main() -> int:
     errors = []
     files = doc_files()
-    if len(files) < 3:                 # README + docs/ARCHITECTURE + serving
+    if len(files) < 4:                 # README + ARCHITECTURE + serving + obs
         errors.append(f"expected README.md plus docs/*.md, found only "
                       f"{[str(f.relative_to(ROOT)) for f in files]}")
+    for req in REQUIRED_DOCS:
+        if not (ROOT / req).exists():
+            errors.append(f"required doc missing: {req}")
     for f in files:
         errors.extend(check_file(f))
     errors.extend(check_ci_agreement())

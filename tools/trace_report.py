@@ -1,0 +1,131 @@
+#!/usr/bin/env python3
+"""Summarize a repro Chrome-trace JSON (train.py --trace / Tracer.export).
+
+Prints, from the ``traceEvents`` stream alone (no repro imports, so it works
+on any machine the trace file lands on):
+
+  * per-span-name duration table (count, total/mean/max ms) for "X" events;
+  * per-graph-node dispatch table (cat == "graph" spans: cluster node,
+    dispatches, samples, fused/streamed dispatch counts);
+  * final value of every counter series ("C" events, e.g. dock.bytes).
+
+``--expect a,b,c`` asserts that every named graph node appears as a
+``stage.<name>`` span — CI's trace smoke uses it to prove the whole GRPO
+graph made it into the trace.  Exit status: 0 ok, 1 empty/missing.
+
+Usage:
+    python tools/trace_report.py run.trace.json [--expect n1,n2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+
+def load_events(path: str) -> list[dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    # Chrome trace allows both the object form and a bare event array
+    events = doc.get("traceEvents", []) if isinstance(doc, dict) else doc
+    if not isinstance(events, list):
+        raise SystemExit(f"{path}: traceEvents is not a list")
+    return events
+
+
+def span_table(events: list[dict]) -> dict[str, dict]:
+    spans: dict[str, dict] = {}
+    for ev in events:
+        if ev.get("ph") != "X":
+            continue
+        s = spans.setdefault(ev["name"], {"count": 0, "total_ms": 0.0,
+                                          "max_ms": 0.0,
+                                          "cat": ev.get("cat", "")})
+        dur_ms = float(ev.get("dur", 0.0)) / 1e3
+        s["count"] += 1
+        s["total_ms"] += dur_ms
+        s["max_ms"] = max(s["max_ms"], dur_ms)
+    return spans
+
+
+def graph_table(events: list[dict]) -> dict[str, dict]:
+    nodes: dict[str, dict] = {}
+    for ev in events:
+        if ev.get("ph") != "X" or ev.get("cat") != "graph":
+            continue
+        args = ev.get("args") or {}
+        name = args.get("node") or ev["name"].removeprefix("stage.")
+        n = nodes.setdefault(name, {"cluster_node": args.get("cluster_node"),
+                                    "dispatches": 0, "samples": 0,
+                                    "fused": 0, "streamed": 0})
+        n["dispatches"] += 1
+        n["samples"] += int(args.get("samples", 0))
+        n["fused"] += bool(args.get("fused"))
+        n["streamed"] += bool(args.get("stream"))
+    return nodes
+
+
+def counter_finals(events: list[dict]) -> dict[str, dict]:
+    finals: dict[str, dict] = defaultdict(dict)
+    for ev in events:              # events are ts-sorted by the exporter,
+        if ev.get("ph") != "C":    # so last write per series wins
+            continue
+        finals[ev["name"]].update(ev.get("args") or {})
+    return dict(finals)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome-trace JSON file")
+    ap.add_argument("--expect", default=None, metavar="N1,N2,...",
+                    help="comma-separated graph-node names that must appear "
+                    "as stage.<name> spans (exit 1 listing any missing)")
+    args = ap.parse_args(argv)
+
+    events = load_events(args.trace)
+    if not events:
+        print(f"{args.trace}: no trace events", file=sys.stderr)
+        return 1
+
+    spans = span_table(events)
+    print(f"{args.trace}: {len(events)} events, {len(spans)} span names\n")
+    print(f"{'span':<28}{'cat':<10}{'count':>7}{'total_ms':>11}"
+          f"{'mean_ms':>10}{'max_ms':>10}")
+    for name in sorted(spans, key=lambda n: -spans[n]["total_ms"]):
+        s = spans[name]
+        print(f"{name:<28}{s['cat']:<10}{s['count']:>7}"
+              f"{s['total_ms']:>11.2f}{s['total_ms'] / s['count']:>10.2f}"
+              f"{s['max_ms']:>10.2f}")
+
+    nodes = graph_table(events)
+    if nodes:
+        print(f"\n{'graph node':<22}{'cluster':>8}{'dispatches':>11}"
+              f"{'samples':>9}{'fused':>7}{'streamed':>9}")
+        for name in sorted(nodes):
+            n = nodes[name]
+            print(f"{name:<22}{str(n['cluster_node']):>8}"
+                  f"{n['dispatches']:>11}{n['samples']:>9}"
+                  f"{n['fused']:>7}{n['streamed']:>9}")
+
+    finals = counter_finals(events)
+    if finals:
+        print("\ncounter final values:")
+        for name in sorted(finals):
+            series = ", ".join(f"{k}={v}" for k, v in
+                               sorted(finals[name].items()))
+            print(f"  {name}: {series}")
+
+    if args.expect:
+        want = [w for w in (p.strip() for p in args.expect.split(",")) if w]
+        missing = [w for w in want if w not in nodes]
+        if missing:
+            print(f"\nMISSING graph nodes (no stage.<name> span): "
+                  f"{missing}", file=sys.stderr)
+            return 1
+        print(f"\nall {len(want)} expected graph nodes present")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
