@@ -1,0 +1,128 @@
+"""Host-tier KV swap: swap-preemption vs recompute-preemption A/B.
+
+Two measurements on the same starved-pool serving setup (small device
+pool, prompts long relative to generation — the regime where preemption
+hurts and re-prefill is the dominant waste):
+
+  * READMISSION COST — the same workload with the host tier off
+    (recompute preemption: a victim's KV is dropped, re-admission
+    re-prefills everything) vs on (swap preemption: reclaimed indexed
+    blocks spill to host RAM and stream back on re-admission).  The
+    metric is ``serve.readmit_prefill_tokens`` — prefill tokens issued
+    for requests that had already been admitted once.  Swap must beat
+    recompute by the asserted ratio; greedy outputs must be bitwise
+    identical between the two runs (the tier's correctness contract).
+  * PREFIX HIT-RATE — GRPO-shaped repeats (same prompts resubmitted
+    after the pool churned past them) with a device-only index vs the
+    tiered device+host index.  Device-only forgets a prefix the moment
+    its blocks are reclaimed; the tier keeps matching from host, so
+    shared (not re-prefilled) rows go up.
+
+``PYTHONPATH=src python -m benchmarks.bench_swap`` or
+``python -m benchmarks.run swap`` (writes BENCH_swap.json; key asserts
+run in CI — see .github/workflows/ci.yml and docs/observability.md).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import build_model
+from repro.serve.engine import ServingEngine
+
+PL = 16            # prompt head worth preserving ...
+MAX_NEW = 24       # ... and decode long enough that survivors churn the pool
+BLOCK = 4
+SLOTS = 3
+NUM_BLOCKS = 16    # admits a full wave but not its decode growth: preemption
+#                    fires, and the survivors' continued allocation reclaims
+#                    (= spills) the victim's blocks while it waits
+HOST_BLOCKS = 64
+
+
+def _serve(cfg, params, prompts, host_blocks, repeats=1):
+    tok = ByteTokenizer()
+    eng = ServingEngine(cfg, max_new=MAX_NEW, eos_id=tok.eos_id,
+                        pad_id=tok.pad_id, greedy=True, max_slots=SLOTS,
+                        block_size=BLOCK, num_blocks=NUM_BLOCKS,
+                        max_seq_len=PL + MAX_NEW,
+                        host_tier_blocks=host_blocks)
+    outs = []
+    for _ in range(repeats):
+        for p in prompts:
+            eng.submit(p)
+        outs.extend(eng.drain(params))
+    eng.sched.check_invariants()
+    stats = eng.stats()
+    eng.close()
+    return {o.rid: o for o in outs}, stats
+
+
+def run(arch: str = "yi-6b") -> dict:
+    cfg = get_smoke_config(arch).replace(dtype="float32", remat=False)
+    model = build_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    prompts = np.random.RandomState(5).randint(
+        0, 250, (6, PL)).astype(np.int32)
+
+    # -- A/B 1: readmission cost, recompute vs swap --------------------------
+    off, off_st = _serve(cfg, params, prompts, 0)
+    on, on_st = _serve(cfg, params, prompts, HOST_BLOCKS)
+    assert off_st["preemptions"] > 0, "pool was never starved — bad workload"
+    assert on_st["swap_in_blocks"] > 0, "tier never swapped — bad workload"
+    for rid in off:         # correctness rides along with the measurement
+        assert np.array_equal(np.asarray(off[rid].gen),
+                              np.asarray(on[rid].gen)), \
+            f"request {rid}: greedy output changed with the host tier on"
+    readmit_ratio = off_st["readmit_prefill_tokens"] / max(
+        on_st["readmit_prefill_tokens"], 1)
+
+    print(f"swap A/B ({arch}): {len(prompts)} requests, PL {PL}, "
+          f"max_new {MAX_NEW}, {SLOTS} slots, {NUM_BLOCKS}-block pool")
+    print("tier,preempt_swap,preempt_recompute,readmit_prefill_tok,"
+          "swap_out_blk,swap_in_blk")
+    print(f"off,{off_st['preempt_swap']},{off_st['preempt_recompute']},"
+          f"{off_st['readmit_prefill_tokens']},0,0")
+    print(f"on,{on_st['preempt_swap']},{on_st['preempt_recompute']},"
+          f"{on_st['readmit_prefill_tokens']},{on_st['swap_out_blocks']},"
+          f"{on_st['swap_in_blocks']}")
+    print(f"swap re-admission issues {readmit_ratio:.1f}x fewer prefill "
+          f"tokens than recompute")
+    assert readmit_ratio >= 2, \
+        f"swap saved only {readmit_ratio:.1f}x readmission prefill tokens"
+
+    # -- A/B 2: prefix hit-rate, device-only vs tiered index -----------------
+    # resubmit the same prompts after the pool churned past them: the
+    # device index has been reclaimed, only the host tier still remembers
+    _, dev_st = _serve(cfg, params, prompts, 0, repeats=2)
+    _, tier_st = _serve(cfg, params, prompts, HOST_BLOCKS, repeats=2)
+    hit_gain = tier_st["shared_prefill_tokens"] / max(
+        dev_st["shared_prefill_tokens"], 1)
+    print(f"\nprefix hit rows over 2 passes: device-only "
+          f"{dev_st['shared_prefill_tokens']}, device+host "
+          f"{tier_st['shared_prefill_tokens']} ({hit_gain:.1f}x)")
+    assert tier_st["shared_prefill_tokens"] > dev_st["shared_prefill_tokens"], \
+        "tiered index matched no more rows than the device index alone"
+
+    return {
+        "preemptions": off_st["preemptions"],
+        "preempt_swap_on": on_st["preempt_swap"],
+        "preempt_recompute_off": off_st["preempt_recompute"],
+        "readmit_prefill_tokens_recompute": off_st["readmit_prefill_tokens"],
+        "readmit_prefill_tokens_swap": on_st["readmit_prefill_tokens"],
+        "readmit_ratio": readmit_ratio,
+        "swap_out_blocks": on_st["swap_out_blocks"],
+        "swap_in_blocks": on_st["swap_in_blocks"],
+        "swap_out_bytes": on_st["swap_out_bytes"],
+        "swap_in_bytes": on_st["swap_in_bytes"],
+        "host_evictions": on_st["swap_host_evictions"],
+        "prefix_hit_rows_dev": dev_st["shared_prefill_tokens"],
+        "prefix_hit_rows_tiered": tier_st["shared_prefill_tokens"],
+        "prefix_hit_gain": hit_gain,
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -6,6 +6,7 @@
   Figure 10-> bench_reshard_memory (allgather-swap memory release)
   kernels  -> bench_kernels        (fused-kernel micro-benchmarks)
   serving  -> bench_serving        (sync vs continuous-batching generation)
+  swap     -> bench_swap           (host-tier KV swap vs recompute preemption)
   Table 2  -> bench_partial_stream (partial rollout streams mid-drain)
   Fig. 11  -> bench_moe_scale      (400B-class MoE at production scale)
   roofline -> roofline_table       (renders benchmarks/results/*.json)
@@ -25,7 +26,7 @@ import os
 import time
 
 SECTIONS = ["dispatch", "linearity", "reshard_memory", "kernels", "e2e",
-            "serving", "partial_stream", "moe_scale", "roofline"]
+            "serving", "swap", "partial_stream", "moe_scale", "roofline"]
 
 
 def main() -> None:

@@ -8,7 +8,10 @@ slot, and evicts finished sequences immediately — freed slots refill from
 the queue with no batch barrier.
 
 Demonstrates: the online ``submit()``/``step()`` API under staggered
-arrivals — admission, refill, and (with ``--blocks``) recompute preemption.
+arrivals — admission, refill, and (with ``--blocks``) recompute preemption,
+which ``--host-tier`` upgrades to SWAP preemption: a victim's reclaimed KV
+blocks spill to a host-RAM tier and stream back on re-admission instead of
+being re-prefilled (a swap-counter line reports the traffic).
 
 Expected output: the reshard banner, an aggregate line (requests / tokens /
 tok/s / engine steps) with p50/p99 latency, then one row per request —
@@ -18,7 +21,11 @@ rid, prompt -> decoded text, token count, latency, preemption count.
     PYTHONPATH=src python examples/serve.py --arch yi-6b
 
 Use ``--slots`` smaller than the request count to watch refill in action,
-``--blocks`` to shrink the KV pool until preemption kicks in.
+``--blocks`` to shrink the KV pool until preemption kicks in, and then
+``--host-tier N`` to watch the same starved pool swap instead of
+recompute.  ``--trace out.json`` exports a Chrome trace of the run
+(chrome://tracing; summarize with tools/trace_report.py — the
+``serve.swap.out``/``serve.swap.in`` spans are the async copy engine).
 """
 import argparse
 import time
@@ -53,6 +60,11 @@ def main():
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--blocks", type=int, default=0,
                     help="KV pool blocks (0 = enough for all slots)")
+    ap.add_argument("--host-tier", type=int, default=0, metavar="N",
+                    help="host-RAM KV tier capacity in blocks (0 = off); "
+                    "turns recompute preemption into swap preemption")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Chrome trace of the serving run")
     ap.add_argument("--greedy", action="store_true")
     args = ap.parse_args()
 
@@ -73,12 +85,15 @@ def main():
     print(f"resharded to generation layout "
           f"(D2H released {led.d2h_bytes / 1e6:.1f} MB/device)")
 
+    from repro.obs import Tracer
+    tracer = Tracer(enabled=bool(args.trace))
     max_seq = max(len(tok.encode(r)) + n for r, n in REQUESTS)
     engine = ServingEngine(
         cfg, max_new=48, eos_id=tok.eos_id, pad_id=tok.pad_id,
         greedy=args.greedy, max_slots=args.slots,
         block_size=args.block_size, max_seq_len=max_seq,
-        num_blocks=args.blocks or None)
+        num_blocks=args.blocks or None,
+        host_tier_blocks=args.host_tier, tracer=tracer)
 
     # online loop: two requests arrive per tick, the engine never waits for
     # a full batch to form
@@ -101,11 +116,23 @@ def main():
     print(f"latency p50 {st['latency_s']['p50'] * 1e3:.0f} ms, "
           f"p99 {st['latency_s']['p99'] * 1e3:.0f} ms; "
           f"ttft p50 {st['ttft_s']['p50'] * 1e3:.0f} ms")
+    if args.host_tier:
+        print(f"host tier: {st['preempt_swap']} swap / "
+              f"{st['preempt_recompute']} recompute preemptions; "
+              f"swapped out {st['swap_out_blocks']} blocks "
+              f"({st['swap_out_bytes'] / 1e6:.1f} MB), in "
+              f"{st['swap_in_blocks']} blocks "
+              f"({st['swap_in_bytes'] / 1e6:.1f} MB); "
+              f"{st['host_resident_blocks']}/{st['host_tier_blocks']} "
+              f"host blocks resident")
     for o in sorted(outs, key=lambda o: o.rid):
         txt = tok.decode(o.gen)
         pre = f" ({o.preemptions} preemptions)" if o.preemptions else ""
         print(f"  [{o.rid}] {rid2text[o.rid]!r} -> {txt!r}  "
               f"{len(o.gen)} tok, {o.latency_s * 1e3:.0f} ms{pre}")
+    engine.close()
+    if args.trace:
+        print(f"trace written to {tracer.export(args.trace)}")
 
 
 if __name__ == "__main__":

@@ -128,6 +128,11 @@ class RLConfig:
     serve_prefill_chunk: int = 0     # chunked prefill: max prefill tokens
     #                                  per engine step (0 = whole-prompt
     #                                  admission prefill, the classic path)
+    serve_host_tier_blocks: int = 0  # host-RAM KV tier capacity in blocks
+    #                                  (0 = off): reclaimed-but-indexed
+    #                                  blocks spill to host and preempted/
+    #                                  suspended requests swap their KV
+    #                                  back in instead of re-prefilling
     # --- dataflow (the paper's contribution) ---
     use_transfer_dock: bool = True   # False => centralized replay buffer baseline
     num_warehouses: int = 4          # S, usually = #nodes

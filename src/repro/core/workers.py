@@ -39,6 +39,7 @@ class ActorWorker:
                 block_size=rl.serve_block_size,
                 prefix_cache=getattr(rl, "serve_prefix_cache", True),
                 prefill_chunk=getattr(rl, "serve_prefill_chunk", 0) or None,
+                host_tier_blocks=getattr(rl, "serve_host_tier_blocks", 0),
                 tracer=tracer)
         elif self.engine_kind == "sync":
             self.engine = RolloutEngine(

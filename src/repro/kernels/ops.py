@@ -128,10 +128,15 @@ def _flash_fwd_impl(q, k, v, causal, window, scale, q_pos=None):
     for the causal/window masks; the default keeps the standard convention
     (q rows are the last Sq of the Sk context).  Chunked prefill passes the
     chunk's absolute offsets — extra keys this masks out contribute exact
-    zeros to every row's reductions, so a chunk's rows stay bitwise equal to
-    a whole-prompt prefill whenever both contexts fit one kv block
-    (``_pick_block``); beyond that the online-softmax rescan order differs
-    and equality degrades to allclose."""
+    zeros to every row's reductions, so a chunk's rows stay bitwise equal
+    to a whole-prompt prefill whenever both contexts fit one kv block
+    (``_pick_block``) AND both Sk are powers of two: XLA reduces a pow2 key
+    length with the same real-element grouping at any pow2 size, but a
+    non-pow2 Sk regroups the reduction value-dependently and breaks row
+    bitwise-equality once a row attends past the regroup boundary (which
+    is why ``chunk_prefill_attention`` pow2-pads its capacity window).
+    Beyond one kv block the online-softmax rescan order differs and
+    equality degrades to allclose."""
     b, sq, h, d = q.shape
     _, sk, kv, _ = k.shape
     g = h // kv
@@ -398,7 +403,23 @@ def chunk_prefill_attention(q, k_new, v_new, pool_k, pool_v, table, start, *,
     c = q.shape[1]
     bs = block_size
     flat = (table[:, None] * bs + jnp.arange(bs)[None, :]).reshape(-1)
-    kw = pool_k[flat]                       # (MB*bs, KV, d)
+    # pad the window to the next POWER OF TWO (extra rows read the pool's
+    # last null-block row; their positions exceed every real q_pos, so the
+    # causal mask kills them).  The whole-prompt path always runs flash at
+    # a pow2 key length (admission buckets), and pow2 lengths reduce with
+    # identical real-element grouping — appended masked keys contribute
+    # exact zeros.  A NON-pow2 capacity window (e.g. 48 rows) makes the
+    # backend regroup the reduction value-dependently, which broke the
+    # chunk==dense bit contract once a row attended past the regroup
+    # boundary; the pad closes that hole.
+    w = flat.shape[0]
+    p2 = 1
+    while p2 < w:
+        p2 *= 2
+    if p2 != w:
+        flat = jnp.concatenate(
+            [flat, jnp.full((p2 - w,), pool_k.shape[0] - 1, flat.dtype)])
+    kw = pool_k[flat]                       # (pow2 >= MB*bs, KV, d)
     vw = pool_v[flat]
     idx = start + jnp.arange(c)
     # pad rows past the window clamp onto nothing ("drop"): they are masked

@@ -51,6 +51,10 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="serving chunked prefill: max prefill tokens per "
                     "engine step (0 = whole-prompt admission)")
+    ap.add_argument("--host-tier-blocks", type=int, default=0,
+                    help="host-RAM KV tier capacity in blocks (0 = off): "
+                    "preempted/suspended KV swaps to host and back instead "
+                    "of being recomputed")
     ap.add_argument("--rollout-budget", type=int, default=8,
                     help="tokens per sequence per iteration "
                          "(--partial-rollout)")
@@ -95,6 +99,7 @@ def main() -> None:
         num_warehouses=args.num_nodes,
         serve_prefix_cache=not args.no_prefix_cache,
         serve_prefill_chunk=args.prefill_chunk,
+        serve_host_tier_blocks=args.host_tier_blocks,
     )
     if args.rollout_engine:
         rl = rl.replace(rollout_engine=args.rollout_engine)

@@ -4,9 +4,13 @@
     ``init_cache/prefill/decode`` API: ref-counted, prefix-indexed blocks
     (prompt-head sharing) with a Pallas gather kernel for block reads and a
     pure-JAX reference path.
-  * ``scheduler``    — request queue: prefix-matched admission, slot
-    assignment, EOS-driven eviction and refill, and recompute-preemption
-    when blocks run out.
+  * ``host_tier``    — host-memory KV tier beneath the device pool:
+    reclaimed-but-indexed blocks spill to host RAM through an async,
+    double-buffered swap engine, and the prefix index spans both tiers —
+    swap, don't recompute.
+  * ``scheduler``    — request queue: prefix-matched admission (device OR
+    host hits), slot assignment, EOS-driven eviction and refill, and
+    swap- or recompute-preemption when blocks run out.
   * ``engine``       — ``ServingEngine``: online ``submit/step/drain`` (with
     mid-sequence submission, per-run budgets — ``run_to_budget`` hands
     budget-exhausted requests back resumable, the backend of partial
@@ -17,5 +21,6 @@
 See docs/serving.md for the block lifecycle and bit-identity contracts.
 """
 from repro.serve.engine import RequestOutput, ServingEngine  # noqa: F401
+from repro.serve.host_tier import HostKVTier, SwapEngine  # noqa: F401
 from repro.serve.paged_cache import PagedKVCache  # noqa: F401
 from repro.serve.scheduler import OutOfBlocksError, Request, Scheduler  # noqa: F401

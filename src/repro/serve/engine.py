@@ -45,19 +45,31 @@ Admission is PREFIX-CACHED and (optionally) CHUNKED:
     max-length prompt admitted mid-decode never monopolizes a step.
     Mid-prefill slots ride the fused decode step as idle (tables masked to
     the null block) until their first token is sampled.
+  * ``host_tier_blocks=N`` — attaches a host-RAM KV tier beneath the
+    device pool (serve/host_tier.py): reclaiming an indexed
+    prefill-provenance block SPILLS it to host instead of dropping it, the
+    scheduler matches host-resident prefixes at admission, and re-admission
+    streams them back (swap preemption instead of recompute preemption).
+    Requires ``prefix_cache=True`` — the tier is the index's second level.
 
 Bit-identity scope (stated precisely, because the suite enforces it):
 ``generate()``'s batch path keeps its bitwise contract with
 ``RolloutEngine`` (incl. gen_logp) at ANY capacity — stash admissions
 inject the one batched prefill's rows, and a prefix match only elides
 writing identical bits.  The ONLINE path (submit/step, and generate()'s
-preemption refills) is bitwise invariant to sharing and chunk size while
-the slot capacity fits one flash kv-block (``REPRO_ATTN_BLOCK``, 512 rows
-— every test/smoke config); past that the continuation chunk's
-online-softmax block partition differs from whole-prompt prefill's, logits
-agree to allclose rather than bitwise, and greedy equality is token-level
-in practice — the same caveat the PR-4 bucketed admission prefill already
-carried versus the sync engine.  See docs/serving.md.
+preemption refills) is bitwise invariant to sharing, chunk size, and the
+host tier being on or off, while the pow2-padded slot capacity fits one
+flash kv-block (``REPRO_ATTN_BLOCK``, 512 rows — every test/smoke
+config); past that the continuation chunk's online-softmax block
+partition differs from whole-prompt prefill's, logits agree to allclose
+rather than bitwise, and greedy equality is token-level in practice — the
+same caveat the PR-4 bucketed admission prefill already carried versus
+the sync engine.  The tier-on/off leg additionally rests on three rules:
+only prefill-provenance blocks spill (``PagedKVCache.mark_decode_write``),
+a match chain never continues through device blocks after a host hit
+(``Scheduler._match``), and swap-in registration lands at admission like
+a whole-tail recompute's — so prefer unchunked admission when exact
+tier-on/off logp equality matters.  See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -72,6 +84,7 @@ from repro.configs.base import ModelConfig
 from repro.core.rollout import RolloutResult, sample_tokens
 from repro.models.model import build_model
 from repro.obs import MetricsRegistry, get_tracer
+from repro.serve.host_tier import HostKVTier
 from repro.serve.paged_cache import (PagedKVCache, blocks_for,
                                      scatter_prefill, scatter_token)
 from repro.serve.scheduler import Request, Scheduler
@@ -111,7 +124,7 @@ class ServingEngine:
                  max_slots: int = 8, block_size: int = 16,
                  max_seq_len: int | None = None, num_blocks: int | None = None,
                  prefix_cache: bool = True, prefill_chunk: int | None = None,
-                 seed: int = 0, tracer=None):
+                 host_tier_blocks: int = 0, seed: int = 0, tracer=None):
         if cfg.arch_type not in ("dense", "moe"):
             # ssm/hybrid cache recurrent state (nothing to page); vlm would
             # need per-request vision_embeds carried through preemption
@@ -134,6 +147,12 @@ class ServingEngine:
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.prefill_chunk = prefill_chunk
+        if host_tier_blocks and not prefix_cache:
+            raise ValueError(
+                "host_tier_blocks requires prefix_cache=True: the host tier "
+                "is the prefix index's second level — without the index "
+                "there is nothing to spill under or match against")
+        self.host_tier_blocks = host_tier_blocks
         self._num_blocks_req = num_blocks
         self.cache: PagedKVCache | None = None
         self.sched: Scheduler | None = None
@@ -156,6 +175,14 @@ class ServingEngine:
         #   path, block/memory savings on the batch path)
         self.tracer = tracer if tracer is not None else get_tracer()
         self.metrics = MetricsRegistry()
+        # the host tier outlives pool regrows (_ensure_state rebuilds the
+        # cache; host entries are content-addressed by prefix key, so they
+        # stay valid against any device pool shape)
+        self.host_tier = (
+            HostKVTier(cfg, num_blocks=host_tier_blocks,
+                       block_size=block_size, metrics=self.metrics,
+                       tracer=self.tracer)
+            if host_tier_blocks else None)
         self._step_prefill = 0
         if max_seq_len is not None:
             self._ensure_state(max_seq_len)
@@ -183,13 +210,21 @@ class ServingEngine:
                     f"mid-decode; construct the engine with max_seq_len>= "
                     f"{max_seq} for mixed loads")
         waiting = self.sched.waiting if self.sched is not None else ()
+        if self.cache is not None and self.host_tier is not None:
+            # regrow drops the old pool; any in-flight swap-in targeted its
+            # rows, so retire those (the owning requests were preempted —
+            # they re-prefill; host entries themselves are content-addressed
+            # and survive the regrow)
+            self.host_tier.swap.drain()
+            self.host_tier.swap.pop_ready()
         num_blocks = self._num_blocks_req or self.max_slots * mb
         self.cache = PagedKVCache(self.cfg, num_blocks=num_blocks,
                                   block_size=self.block_size,
-                                  max_blocks_per_seq=mb)
+                                  max_blocks_per_seq=mb,
+                                  host=self.host_tier)
         self.sched = Scheduler(self.cache, self.max_slots,
                                prefix_cache=self.prefix_cache,
-                               tracer=self.tracer)
+                               tracer=self.tracer, metrics=self.metrics)
         self.sched.waiting.extend(waiting)
 
     # ------------------------------------------------------------------
@@ -227,11 +262,22 @@ class ServingEngine:
             "finished": m.value("serve.finished"),
             "suspended": m.value("serve.suspended"),
             "preemptions": m.value("serve.preemptions"),
+            "preempt_swap": m.value("serve.preempt.swap"),
+            "preempt_recompute": m.value("serve.preempt.recompute"),
             "steps": m.value("serve.steps"),
             "prefill_tokens": m.value("serve.prefill_tokens"),
             "shared_prefill_tokens": m.value("serve.shared_prefill_tokens"),
+            "readmit_prefill_tokens": m.value("serve.readmit_prefill_tokens"),
             "decode_tokens": m.value("serve.decode_tokens"),
             "max_step_prefill": int(m.value("serve.max_step_prefill")),
+            "swap_out_blocks": m.value("serve.swap.out_blocks"),
+            "swap_out_bytes": m.value("serve.swap.out_bytes"),
+            "swap_in_blocks": m.value("serve.swap.in_blocks"),
+            "swap_in_bytes": m.value("serve.swap.in_bytes"),
+            "swap_host_evictions": m.value("serve.swap.host_evictions"),
+            "host_tier_blocks": self.host_tier_blocks,
+            "host_resident_blocks": (len(self.host_tier)
+                                     if self.host_tier else 0),
             "ttft_s": m.summarize("serve.ttft_s"),
             "latency_s": m.summarize("serve.latency_s"),
         }
@@ -327,13 +373,21 @@ class ServingEngine:
         return rid
 
     def flush_prefix(self) -> None:
-        """Drop every cached prefix now.  ``step()`` does this automatically
-        when it sees a NEW params object; call it explicitly if you update
-        weights by mutating the params container in place (object identity
-        cannot see that)."""
+        """Drop every cached prefix now — BOTH tiers (the host tier flushes
+        through ``PagedKVCache.flush_index``).  ``step()`` does this
+        automatically when it sees a NEW params object; call it explicitly
+        if you update weights by mutating the params container in place
+        (object identity cannot see that)."""
         if self.sched is not None:
             self.sched.flush_prefix()
         self._seen_params = None
+
+    def close(self) -> None:
+        """Stop the host tier's swap worker (no-op without a tier).  The
+        worker is a daemon thread, so this is for tidy tests and long-lived
+        drivers that churn engines, not a correctness requirement."""
+        if self.host_tier is not None:
+            self.host_tier.close()
 
     @staticmethod
     def _prefilling(req: Request) -> bool:
@@ -373,6 +427,11 @@ class ServingEngine:
                     "preemptions": m.value("serve.preemptions"),
                     "prefix_hit_rows": m.value(
                         "serve.shared_prefill_tokens")}, cat="serve")
+        if self.host_tier is not None:
+            tr.counter("serve.swap",
+                       {"out_bytes": m.value("serve.swap.out_bytes"),
+                        "in_bytes": m.value("serve.swap.in_bytes"),
+                        "host_resident": len(self.host_tier)}, cat="serve")
         return finished
 
     def _step_once(self, params) -> list[RequestOutput]:
@@ -430,6 +489,10 @@ class ServingEngine:
         lp = np.asarray(lp)
         for slot in decodable:
             req = self.sched.running[slot]
+            # the row just written lives in this block: taint it against
+            # host spill (decode bytes are not prefill-reproducible)
+            self.cache.mark_decode_write(int(
+                self.sched.tables[slot, req.cache_len // self.block_size]))
             req.cache_len += 1
             req.generated.append(int(nxt[slot]))
             req.gen_logp.append(float(lp[slot]))
@@ -536,6 +599,11 @@ class ServingEngine:
                     jnp.int32(p - 1))
                 krows, vrows = cache["k"][:, 0], cache["v"][:, 0]
                 self.metrics.inc("serve.prefill_tokens", p)
+                if req.preemptions:
+                    # re-admission prefill: with a host tier most of these
+                    # rows would have been swapped in instead — THE
+                    # machine-readable recompute-vs-swap A/B quantity
+                    self.metrics.inc("serve.readmit_prefill_tokens", p)
                 self._step_prefill += p
                 flat = self._write_rows(req.slot, 0, 0, p, pb)
                 self.cache.pool_k = self._write(self.cache.pool_k, krows, flat)
@@ -595,6 +663,8 @@ class ServingEngine:
         self.cache.pool_v = self._write(self.cache.pool_v, vrows, flat)
         req.cache_len = start + take
         self.metrics.inc("serve.prefill_tokens", take)
+        if req.preemptions:
+            self.metrics.inc("serve.readmit_prefill_tokens", take)
         self._step_prefill += take
         self.sched.register_prefix(req)
         if not self._prefilling(req):

@@ -1,0 +1,368 @@
+"""Host-memory KV tier: swap, don't recompute.
+
+The paged pool (serve/paged_cache.py) is the DEVICE tier of the KV cache;
+this module adds the HOST tier beneath it — the serving-side analogue of
+the paper's allgather-swap memory strategy (state that is not needed on
+the accelerator right now should live in host RAM, not be recomputed).
+
+Two pieces:
+
+  * ``HostKVTier`` — a numpy-backed block store of ``num_blocks`` host
+    slots, each holding one device block's rows ``(layers, block_size,
+    kv, hd)``, addressed by the SAME chained prefix keys the device index
+    uses (``prefix_key``).  Together the two indexes form one tiered
+    prefix index: a key resolves in exactly ONE tier at a time (spilling
+    moves the entry down, swap-in moves it back up), so effective prefix-
+    cache capacity is bounded by host RAM, not the device pool.  Eviction
+    within the host tier is LRU over an ``OrderedDict``.
+  * ``SwapEngine`` — the async mover.  ONE background worker drains a
+    BOUNDED job queue, issuing ``jax.device_get`` for spills (device
+    block -> host slot) and ``jax.device_put`` for swap-ins (host slot ->
+    staging buffer -> device rows).  The queue bound doubles as the
+    staging depth: at most ``depth`` blocks are in flight, each swap-in
+    owns one of ``depth`` preallocated host staging buffers
+    (double-buffered by default), and a full queue back-pressures the
+    submitter instead of growing.
+
+Why swap beats recompute: a spilled block's bytes came out of the device
+pool with ``device_get`` and go back with ``device_put`` — the round trip
+is byte-exact, so a swapped-in block is BIT-IDENTICAL to the block that
+left.  Recompute-preemption re-prefills the same tokens under the same
+weights, which (by the prefix-cache contract) also reproduces the same
+bits — but pays the prefill FLOPs again.  Swap pays a PCIe/host-memcpy
+copy instead, and the greedy bit-identity contract holds with the tier on
+or off because both paths materialize the same pool bytes.
+
+Determinism with an async engine: all BOOKKEEPING (index moves, slot
+claims, counters) happens synchronously on the caller's thread; only the
+byte movement is asynchronous.  The cache drains pending swap-ins the
+first time its pools are READ after a swap-in was scheduled
+(``PagedKVCache._apply_swap_ins``), so compute never observes a
+half-arrived block and the step order stays deterministic.  Spills need
+no drain before reuse of the DEVICE block (the source slice is an
+immutable jax array — a snapshot by construction); reuse of the HOST slot
+is ordered by the single-worker FIFO queue (a later write to the same
+slot is executed after the earlier one).  The one cross-thread wait is
+``take()`` on a slot whose spill is still in flight — tracked per slot
+and rare (a block swapped back in the same breath it was spilled).
+
+The tier is intentionally ignorant of scheduling: it never decides WHAT
+to spill or swap in.  ``PagedKVCache.alloc()`` spills on reclaim,
+``Scheduler``'s admission matches host-resident keys and calls
+``PagedKVCache.swap_in`` — see those modules.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from collections import OrderedDict, deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.obs import MetricsRegistry, get_tracer
+
+
+class SwapEngine:
+    """Async host<->device block mover (one worker, bounded staging).
+
+    Jobs are tuples: ``("out", host_slot, dev_k, dev_v)`` copies a device
+    block's rows into the tier's store (``jax.device_get`` via
+    ``np.asarray``); ``("in", flat_rows, stage)`` uploads staging buffer
+    ``stage`` (``jax.device_put`` via ``jnp.array``) and parks the device
+    arrays on the ready list for the cache's next drain point to scatter.
+    ``depth`` bounds BOTH the job queue and the swap-in staging ring, so
+    at most ``depth`` blocks are ever in flight — submission blocks when
+    the engine is that far behind (back-pressure, not growth).
+    """
+
+    def __init__(self, tier: "HostKVTier", *, depth: int = 2, tracer=None):
+        self.tier = tier
+        self.depth = depth
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self._jobs: queue.Queue = queue.Queue(maxsize=depth)
+        self._cond = threading.Condition()
+        self._pending = 0                  # submitted, not yet executed
+        self._ready: list[tuple] = []      # completed swap-ins: (flat, k, v)
+        self._error: BaseException | None = None
+        self._thread: threading.Thread | None = None
+        # swap-in staging ring: `depth` preallocated host buffer pairs.
+        # acquire_stage() blocks when all are owned by in-flight swap-ins —
+        # the double-buffering bound.
+        shp = tier.block_shape
+        self._stage_k = [np.zeros(shp, tier.dtype) for _ in range(depth)]
+        self._stage_v = [np.zeros(shp, tier.dtype) for _ in range(depth)]
+        self._free_stage: queue.Queue = queue.Queue()
+        for i in range(depth):
+            self._free_stage.put(i)
+
+    # -- submission (caller thread) -----------------------------------------
+    def submit_out(self, host_slot: int, dev_k, dev_v) -> None:
+        """Queue a spill: device rows -> ``store[host_slot]``.  The D2H
+        transfer is ENQUEUED here, on the caller's thread
+        (``copy_to_host_async``) — that sequences it in the device stream
+        before any later donated step can recycle pool buffers, which is
+        what makes the worker's eventual ``device_get`` a pure collect of
+        already-fetched bytes rather than a cross-thread read racing the
+        compute stream."""
+        for a in (dev_k, dev_v):
+            if hasattr(a, "copy_to_host_async"):
+                a.copy_to_host_async()
+        self._submit(("out", host_slot, dev_k, dev_v))
+
+    def acquire_stage(self) -> int:
+        """Claim a staging buffer (blocks while all ``depth`` are in
+        flight).  The caller fills it from the store and passes it to
+        ``submit_in``; the worker releases it after upload."""
+        return self._free_stage.get()
+
+    def submit_in(self, flat_rows, stage: int) -> None:
+        """Queue a swap-in: staging buffer ``stage`` -> device arrays on
+        the ready list, destined for pool rows ``flat_rows``."""
+        self._submit(("in", flat_rows, stage))
+
+    def _submit(self, job) -> None:
+        self._ensure_worker()
+        with self._cond:
+            self._raise_if_failed()
+            self._pending += 1
+        self._jobs.put(job)                # blocks at `depth` in flight
+
+    # -- synchronization ----------------------------------------------------
+    def drain(self) -> None:
+        """Block until every submitted job has executed — the explicit
+        drain point that keeps step order deterministic.  Re-raises a
+        worker-thread failure here, on the caller's thread."""
+        with self._cond:
+            if self._pending and self.tracer.enabled:
+                with self.tracer.span("serve.swap.drain", cat="serve",
+                                      args={"pending": self._pending}):
+                    while self._pending:
+                        self._cond.wait()
+            else:
+                while self._pending:
+                    self._cond.wait()
+            self._raise_if_failed()
+
+    def pop_ready(self) -> list[tuple]:
+        """Take ownership of the completed swap-ins ``(flat_rows, dev_k,
+        dev_v)``, in submission order.  Separate from ``drain()`` so the
+        tier's internal waits never swallow scatters the CACHE still owes
+        its pools."""
+        with self._cond:
+            ready, self._ready = self._ready, []
+        return ready
+
+    @property
+    def in_flight(self) -> int:
+        with self._cond:
+            return self._pending
+
+    def close(self) -> None:
+        """Drain and stop the worker (tests / long-lived drivers; the
+        daemon thread dies with the process otherwise)."""
+        if self._thread is not None and self._thread.is_alive():
+            self.drain()
+            self._jobs.put(None)
+            self._thread.join(timeout=10.0)
+        self._thread = None
+
+    def _raise_if_failed(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("KV swap worker failed") from err
+
+    # -- worker -------------------------------------------------------------
+    def _ensure_worker(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._run, name="kv-swap", daemon=True)
+            self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            job = self._jobs.get()
+            if job is None:
+                return
+            try:
+                self._execute(job)
+            except BaseException as e:  # noqa: BLE001 — surfaced at drain
+                with self._cond:
+                    self._error = e
+            finally:
+                with self._cond:
+                    self._pending -= 1
+                    self._cond.notify_all()
+
+    def _execute(self, job) -> None:
+        tier, tr = self.tier, self.tracer
+        if job[0] == "out":
+            _, slot, dev_k, dev_v = job
+            with tr.span("serve.swap.out", cat="serve",
+                         args={"host_slot": slot,
+                               "bytes": tier.block_bytes}):
+                # device_get: jax array -> the store's preallocated rows
+                tier.store_k[slot][...] = np.asarray(dev_k)
+                tier.store_v[slot][...] = np.asarray(dev_v)
+            with self._cond:
+                n = tier._inflight_out.get(slot, 0) - 1
+                if n <= 0:
+                    tier._inflight_out.pop(slot, None)
+                else:
+                    tier._inflight_out[slot] = n
+        else:
+            _, flat_rows, stage = job
+            with tr.span("serve.swap.in", cat="serve",
+                         args={"bytes": tier.block_bytes}):
+                # device_put + MATERIALIZED copy: on CPU backends a plain
+                # device_put may alias the numpy staging buffer (zero-copy)
+                # or read it lazily under async dispatch, and the buffer is
+                # reused the moment we release it — so copy through a
+                # device-side op and block until it has actually executed
+                # before handing the stage back
+                dev_k = jnp.array(self._stage_k[stage], copy=True)
+                dev_v = jnp.array(self._stage_v[stage], copy=True)
+                jax.block_until_ready((dev_k, dev_v))
+            self._free_stage.put(stage)
+            with self._cond:
+                self._ready.append((flat_rows, dev_k, dev_v))
+
+
+class HostKVTier:
+    """Host-RAM block store + the prefix index's second level.
+
+    ``put``/``take``/``invalidate``/``flush`` mutate the index and slot
+    bookkeeping synchronously (deterministic, caller-thread); the byte
+    movement behind ``put`` and ``take``->``submit_in`` is the
+    ``SwapEngine``'s async business.  Capacity is ``num_blocks`` host
+    slots; when full, ``put`` evicts the least-recently-used key — the
+    host tier is a cache over recomputable state, so dropping is always
+    safe (the victim falls back to recompute-on-readmission).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, num_blocks: int, block_size: int,
+                 metrics=None, tracer=None, staging: int = 2):
+        if num_blocks < 1:
+            raise ValueError(f"host tier needs >= 1 block, got {num_blocks}")
+        n, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+        self.cfg = cfg
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.dtype = np.dtype(L.cdtype(cfg))
+        self.block_shape = (n, block_size, kv, hd)
+        self.store_k = np.zeros((num_blocks, *self.block_shape), self.dtype)
+        self.store_v = np.zeros_like(self.store_k)
+        self.block_bytes = int(self.store_k[0].nbytes * 2)  # k + v
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # LRU index: oldest key first; lookup/put refresh recency
+        self._index: OrderedDict[bytes, int] = OrderedDict()
+        self._slot_key: dict[int, bytes] = {}
+        self._free: deque[int] = deque(range(num_blocks))
+        # host slots with a spill still in flight (guarded by swap._cond):
+        # take() must not read the store before the worker wrote it
+        self._inflight_out: dict[int, int] = {}
+        self.swap = SwapEngine(self, depth=staging, tracer=tracer)
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    @property
+    def host_bytes(self) -> int:
+        return int(self.store_k.nbytes + self.store_v.nbytes)
+
+    # -- index --------------------------------------------------------------
+    def lookup(self, key: bytes) -> int | None:
+        """Host slot caching exactly this prefix, or None.  A hit counts as
+        a use for LRU eviction ordering."""
+        slot = self._index.get(key)
+        if slot is not None:
+            self._index.move_to_end(key)
+        return slot
+
+    def put(self, key: bytes, dev_k, dev_v) -> None:
+        """Spill one device block's rows under ``key`` (async device_get).
+        No-op when the key is already host-resident — identical content
+        (same tokens, same weights) is already down here.  When the store
+        is full the LRU key is evicted: it falls all the way out of the
+        tiered index and its next use pays recompute, exactly the pre-tier
+        behavior."""
+        if key in self._index:
+            self._index.move_to_end(key)
+            return
+        if self._free:
+            slot = self._free.popleft()
+        else:
+            _, slot = self._index.popitem(last=False)   # LRU victim
+            del self._slot_key[slot]
+            self.metrics.inc("serve.swap.host_evictions")
+        self._index[key] = slot
+        self._slot_key[slot] = key
+        with self.swap._cond:
+            self._inflight_out[slot] = self._inflight_out.get(slot, 0) + 1
+        # counters tick on the caller thread so stats stay deterministic
+        self.metrics.inc("serve.swap.out_blocks")
+        self.metrics.inc("serve.swap.out_bytes", self.block_bytes)
+        self.swap.submit_out(slot, dev_k, dev_v)
+
+    def take(self, key: bytes) -> int | None:
+        """Claim ``key``'s content for a swap-in: drop the index entry,
+        copy the slot into a staging buffer, free the slot.  Returns the
+        staging buffer id (pass to ``swap.submit_in``), or None if the key
+        is not host-resident (evicted since it was matched)."""
+        slot = self._index.pop(key, None)
+        if slot is None:
+            return None
+        del self._slot_key[slot]
+        with self.swap._cond:
+            busy = slot in self._inflight_out
+        if busy:
+            # our own spill has not landed yet (swapped back in the same
+            # breath) — the only cross-thread wait in the design
+            self.swap.drain()
+        stage = self.swap.acquire_stage()
+        self.swap._stage_k[stage][...] = self.store_k[slot]
+        self.swap._stage_v[stage][...] = self.store_v[slot]
+        self._free.append(slot)
+        return stage
+
+    def invalidate(self, key: bytes) -> None:
+        """Drop ``key`` if host-resident (the device tier just indexed the
+        same prefix — one tier owns a key at a time).  No drain needed: a
+        pending spill into the freed slot completes harmlessly, and any
+        LATER spill reusing the slot is ordered after it by the worker's
+        FIFO queue."""
+        slot = self._index.pop(key, None)
+        if slot is not None:
+            del self._slot_key[slot]
+            self._free.append(slot)
+
+    def flush(self) -> None:
+        """Forget every hosted block (weights changed: stale-weights KV
+        must never satisfy a match).  Completed swap-ins on the ready list
+        survive — they belong to requests admitted under the OLD weights
+        that are still running, same as device allocations surviving
+        ``flush_index``."""
+        self.swap.drain()
+        self._index.clear()
+        self._slot_key.clear()
+        self._free = deque(range(self.num_blocks))
+
+    # -- debugging ----------------------------------------------------------
+    def check_consistent(self) -> None:
+        """Slot/key maps mirror, every slot is exactly one of used|free,
+        and nothing is in flight after a drain."""
+        self.swap.drain()
+        assert len(self._index) == len(self._slot_key), "index/slot mismatch"
+        for key, slot in self._index.items():
+            assert self._slot_key.get(slot) == key, (slot, key)
+        used, free = set(self._slot_key), set(self._free)
+        assert not (used & free), f"host slot both used and free: {used & free}"
+        assert len(free) == len(self._free), "duplicate free host slots"
+        assert len(used) + len(free) == self.num_blocks, "host slot leak"
+        assert not self._inflight_out, "in-flight spill after drain"
+
+    def close(self) -> None:
+        self.swap.close()

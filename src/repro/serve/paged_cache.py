@@ -50,6 +50,21 @@ partial-rollout resume re-prefills a prefix that did not change):
     the previous weights must never satisfy a prefix match under the new
     ones (partial rollout accepts a mildly off-policy RESUME, not silently
     stale KV).
+
+With a HOST TIER attached (serve/host_tier.py), reclaiming an indexed
+block SPILLS it instead of dropping it: ``alloc()`` moves the content and
+index entry down to host RAM (async ``device_get``), ``lookup_host()``
+matches it there, and ``swap_in()`` streams it back into a device block
+(async ``device_put``).  A prefix key lives in exactly ONE tier at a time.
+Only PREFILL-provenance blocks spill: a block some decode step wrote into
+(``mark_decode_write``) is dropped on reclaim exactly as without the tier,
+because decode-written KV bytes are not bit-reproducible by re-prefill
+(backend matmul tiling differs by batch shape) and swapping them in would
+break the greedy tier-on/off bit-identity contract.
+The pools are exposed as properties whose getter applies any completed
+swap-ins first (``_apply_swap_ins`` — the drain point), so every compute
+and every spill reads fully-arrived rows and step order stays
+deterministic no matter how the async engine is scheduled.
 """
 from __future__ import annotations
 
@@ -165,6 +180,11 @@ def scatter_prefill(pool: jnp.ndarray, rows: jnp.ndarray,
     return pool.at[:, flat_rows].set(rows)
 
 
+# swap-in landing write (one block of rows); donation keeps the drain point
+# allocation-free just like the engine's prefill writes
+_swap_write = jax.jit(scatter_prefill, donate_argnums=(0,))
+
+
 # ---------------------------------------------------------------------------
 # the cache object (pool arrays + block allocator)
 # ---------------------------------------------------------------------------
@@ -177,21 +197,27 @@ class PagedKVCache:
     bit-compatible with ``RolloutEngine``."""
 
     def __init__(self, cfg: ModelConfig, *, num_blocks: int, block_size: int,
-                 max_blocks_per_seq: int):
+                 max_blocks_per_seq: int, host=None):
         if cfg.num_kv_heads <= 0:
             raise ValueError(
                 f"paged KV cache needs an attention cache; arch "
                 f"{cfg.name!r} ({cfg.arch_type}) has no KV heads")
+        if host is not None and host.block_size != block_size:
+            raise ValueError(
+                f"host tier block_size {host.block_size} != device "
+                f"block_size {block_size}")
         self.cfg = cfg
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.max_blocks_per_seq = max_blocks_per_seq
         self.null_block = num_blocks          # last block = write sink
+        self.host = host                      # HostKVTier | None
+        self._pending_in = 0                  # swap-ins scheduled, unscattered
         n, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
         rows = (num_blocks + 1) * block_size
         dt = L.cdtype(cfg)
-        self.pool_k = jnp.zeros((n, rows, kv, hd), dt)
-        self.pool_v = jnp.zeros((n, rows, kv, hd), dt)
+        self._pool_k = jnp.zeros((n, rows, kv, hd), dt)
+        self._pool_v = jnp.zeros((n, rows, kv, hd), dt)
         self._ref = [0] * num_blocks          # per-block reference counts
         # ref-0 blocks in eviction order (least-recently freed first).  The
         # deque holds (block, epoch) entries and may hold STALE ones for
@@ -205,6 +231,58 @@ class PagedKVCache:
         self._free_set = set(range(num_blocks))
         self._index: dict[bytes, int] = {}    # prefix_key -> block
         self._block_key: dict[int, bytes] = {}  # block -> its index key
+        # blocks whose CURRENT content includes decode-written rows.  Spill
+        # is restricted to prefill-provenance blocks: prefill rows recompute
+        # bit-identically (the chunk-invariance contract), but a decode-
+        # written row does NOT — backends tile a [S,1,d] decode projection
+        # differently from a [1,T,d] prefill, so the same token's KV row
+        # differs in low bits by code path.  Swapping decode-era bytes back
+        # in would therefore break the greedy tier-on/off bit-identity
+        # contract (recompute produces prefill bits).  Decode-tainted
+        # blocks still revive from the DEVICE index like always; once
+        # reclaimed they are dropped and recomputed, tier or no tier.
+        self._decode_written: set[int] = set()
+
+    # -- pools (every read is a swap-in drain point) ------------------------
+    # The pools are PROPERTIES so no caller — engine compute, spill slicing,
+    # dense_view, benchmarks, tests — can ever observe a block whose swap-in
+    # is still in flight: the getter applies completed swap-ins first.  The
+    # setters just rebind (the engine's donate-and-rebind step pattern).
+    @property
+    def pool_k(self) -> jnp.ndarray:
+        if self._pending_in:
+            self._apply_swap_ins()
+        return self._pool_k
+
+    @pool_k.setter
+    def pool_k(self, value: jnp.ndarray) -> None:
+        self._pool_k = value
+
+    @property
+    def pool_v(self) -> jnp.ndarray:
+        if self._pending_in:
+            self._apply_swap_ins()
+        return self._pool_v
+
+    @pool_v.setter
+    def pool_v(self, value: jnp.ndarray) -> None:
+        self._pool_v = value
+
+    def _apply_swap_ins(self) -> None:
+        """Drain point: wait for in-flight swap jobs, scatter every arrived
+        host block into its device rows.  A scatter may target a block that
+        was freed (even re-allocated) after the swap-in was scheduled;
+        ordering keeps that safe — the stale write lands HERE, before any
+        later owner's prefill/decode write, because those writes also read
+        the pool through the draining getter first."""
+        self.host.swap.drain()
+        for flat, dev_k, dev_v in self.host.swap.pop_ready():
+            self._pool_k = _swap_write(self._pool_k, dev_k, flat)
+            self._pool_v = _swap_write(self._pool_v, dev_v, flat)
+        self._pending_in = 0
+
+    def _block_rows(self, b: int) -> slice:
+        return slice(b * self.block_size, (b + 1) * self.block_size)
 
     # -- allocator (O(1): deque pop/push + set membership + refcounts) ------
     @property
@@ -218,8 +296,11 @@ class PagedKVCache:
 
     def alloc(self) -> int:
         """Claim a free block (refcount 0 -> 1).  Reclaims in least-recently-
-        freed order; a reclaimed block's prefix-index entry is dropped — its
-        cached content is being overwritten."""
+        freed order; a reclaimed block's prefix-index entry is dropped — or,
+        with a host tier attached and PREFILL provenance (see
+        ``_decode_written``), SPILLED: the content and index entry move
+        down to host RAM (swap, don't recompute) so a later admission can
+        still match the prefix and stream it back in."""
         while self._free:
             b, epoch = self._free.popleft()
             if b not in self._free_set or epoch != self._free_epoch[b]:
@@ -228,8 +309,19 @@ class PagedKVCache:
                 #                   deque at its true eviction position)
             self._free_set.discard(b)
             key = self._block_key.pop(b, None)
+            tainted = b in self._decode_written
+            self._decode_written.discard(b)   # content dies with the reclaim
             if key is not None:
                 del self._index[key]
+                if self.host is not None and not tainted:
+                    # spill through the draining getter: if this block is
+                    # itself an unscattered swap-in target, its rows land
+                    # first; the slices are immutable jax arrays, so the
+                    # async device_get reads a true snapshot even after
+                    # the new owner overwrites the pool
+                    rows = self._block_rows(b)
+                    self.host.put(key, self.pool_k[:, rows],
+                                  self.pool_v[:, rows])
             self._ref[b] = 1
             return b
         from repro.serve.scheduler import OutOfBlocksError
@@ -247,6 +339,14 @@ class PagedKVCache:
             assert b in self._free_set, b
             self._free_set.discard(b)
         self._ref[b] += 1
+
+    def mark_decode_write(self, b: int) -> None:
+        """Record that a decode step wrote a row into block ``b`` — the
+        engine calls this per decode token.  Taints the block against host
+        spill (its bytes are no longer prefill-reproducible); cleared when
+        ``alloc()`` reclaims the block and its content dies."""
+        if 0 <= b < self.num_blocks:      # null-block writes don't taint
+            self._decode_written.add(b)
 
     def free(self, blocks) -> None:
         """Drop one reference per block; a block becomes reclaimable (and
@@ -270,28 +370,72 @@ class PagedKVCache:
     def register(self, key: bytes, b: int) -> None:
         """Index a FULL block under its prefix key.  First writer wins: a
         duplicate key means another slot already caches identical content
-        (same tokens, same weights), so the extra copy stays unindexed."""
+        (same tokens, same weights), so the extra copy stays unindexed.
+        A host-resident copy of the same key is dropped — the device tier
+        is the faster home and a key lives in exactly one tier."""
         if key in self._index:
             return
         old = self._block_key.get(b)
         assert old is None or old == key, (b, old, key)
+        if self.host is not None:
+            self.host.invalidate(key)
         self._index[key] = b
         self._block_key[b] = key
 
+    # -- host tier ----------------------------------------------------------
+    def lookup_host(self, key: bytes) -> int | None:
+        """Host slot caching exactly this prefix (the tiered index's second
+        level), or None.  A hit is claimed with ``swap_in``."""
+        if self.host is None:
+            return None
+        return self.host.lookup(key)
+
+    def swap_in(self, key: bytes, into: int | None = None) -> int | None:
+        """Stream ``key``'s host-resident block back into the device pool
+        (async device_put; the next pool read is the drain point).  Claims
+        the host content FIRST — before allocating, whose spill could
+        otherwise evict the very block being swapped in — then lands it in
+        a fresh device block, or in ``into`` (an unwritten block the caller
+        already owns, the rematch upgrade path).  Registers the key at its
+        new device home.  Returns the device block, or None when the host
+        copy was evicted between match and claim (caller falls back to
+        recompute for this and deeper blocks)."""
+        host = self.host
+        stage = host.take(key)
+        if stage is None:
+            return None
+        b = self.alloc() if into is None else into
+        bs = self.block_size
+        flat = jnp.asarray(np.arange(b * bs, (b + 1) * bs, dtype=np.int32))
+        host.swap.submit_in(flat, stage)
+        self._pending_in += 1
+        self.register(key, b)
+        host.metrics.inc("serve.swap.in_blocks")
+        host.metrics.inc("serve.swap.in_bytes", host.block_bytes)
+        return b
+
     def flush_index(self) -> None:
-        """Forget every cached prefix (weights changed; allocations keep
-        running on their own rows but are never matched again)."""
+        """Forget every cached prefix in BOTH tiers (weights changed;
+        allocations keep running on their own rows but are never matched
+        again; in-flight swap-ins still land — they belong to running
+        requests admitted before the flush)."""
         self._index.clear()
         self._block_key.clear()
+        if self.host is not None:
+            self.host.flush()
 
     def reset(self) -> None:
         self._ref = [0] * self.num_blocks
         self._free_epoch = [0] * self.num_blocks
         self._free = deque((b, 0) for b in range(self.num_blocks))
         self._free_set = set(range(self.num_blocks))
+        self._decode_written.clear()
         self.flush_index()
-        self.pool_k = jnp.zeros_like(self.pool_k)
-        self.pool_v = jnp.zeros_like(self.pool_v)
+        if self.host is not None:
+            self.host.swap.pop_ready()    # zeroing below discards them anyway
+        self._pending_in = 0
+        self._pool_k = jnp.zeros_like(self._pool_k)
+        self._pool_v = jnp.zeros_like(self._pool_v)
 
     # -- views --------------------------------------------------------------
     def dense_view(self, tables) -> dict:

@@ -51,7 +51,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.obs import get_tracer
+from repro.obs import MetricsRegistry, get_tracer
 from repro.serve.paged_cache import PagedKVCache, blocks_for, prefix_key
 
 
@@ -88,6 +88,10 @@ class Request:
     registered: int = 0                # full blocks already in the prefix
     #                                    index (-1: never register — stale
     #                                    weights era, see flush_prefix)
+    bridged: bool = False              # this admission's prefix match used a
+    #                                    HOST-tier hit; any later match
+    #                                    extension (rematch) must then stay
+    #                                    host-only — see Scheduler._match
     key_chain: list = field(default_factory=list)  # chained prefix keys per
     #                                    full block of prompt+generated;
     #                                    append-only (the stream's prefix
@@ -124,13 +128,15 @@ class Scheduler:
     """Slot + block bookkeeping for the serving engine."""
 
     def __init__(self, cache: PagedKVCache, max_slots: int,
-                 prefix_cache: bool = True, tracer=None):
+                 prefix_cache: bool = True, tracer=None, metrics=None):
         self.cache = cache
         self.max_slots = max_slots
         # lifecycle instants (serve.admit / serve.preempt / serve.suspend /
         # serve.finish) land on the same timeline as the engine's step spans;
-        # a disabled tracer makes every emission a no-op
+        # a disabled tracer makes every emission a no-op.  The registry
+        # (engine-shared) ticks the swap-vs-recompute preemption split.
         self.tracer = tracer if tracer is not None else get_tracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.block_size = cache.block_size
         self.max_blocks = cache.max_blocks_per_seq
         self.prefix_cache = prefix_cache
@@ -185,18 +191,40 @@ class Scheduler:
                                     toks[j * bs:(j + 1) * bs]))
         return chain[i]
 
-    def _match(self, req: Request, toks: np.ndarray) -> list[int]:
-        """Longest chain of indexed full blocks covering a block-aligned
-        head of ``toks``, capped so at least ONE token is left to prefill
-        (the tail prefill's last-token logits seed sampling)."""
+    def _match(self, req: Request, toks: np.ndarray, start: int = 0,
+               bridged: bool = False) -> list[tuple]:
+        """Longest chain of RESIDENT full blocks covering blocks ``start..``
+        of ``toks``'s block-aligned head, capped so at least ONE token is
+        left to prefill (the tail prefill's last-token logits seed
+        sampling).  Each entry is ``("dev", block)`` for a device-index hit
+        or ``("host", key)`` for one resident only in the host tier (to be
+        claimed with ``cache.swap_in``); without a host tier the chain is
+        all-dev and this is the classic single-level match.
+
+        Once the chain crosses a HOST hit it may extend only through host
+        hits (``bridged``) — never back into device blocks.  A host bridge
+        reaches content the tier-less scheduler could not (its chain breaks
+        at the reclaimed block), and reviving device blocks beyond the
+        bridge would (a) share blocks the tier-less run fresh-allocates,
+        skewing pool pressure and hence scheduling, and (b) revive DECODE-
+        written rows where the tier-less run re-prefills — and decode KV is
+        not bit-reproducible by prefill.  Host-run-only continuation maps
+        1:1 onto the tier-less run's recompute (one swap-in target per
+        fresh block, prefill-provenance bytes only), which is what makes
+        greedy gen AND gen_logp bitwise invariant tier on/off."""
         if not self.prefix_cache:
             return []
-        chain: list[int] = []
-        for i in range((len(toks) - 1) // self.block_size):
-            b = self.cache.lookup(self._block_key(req, i, toks))
-            if b is None:
+        chain: list[tuple] = []
+        for i in range(start, (len(toks) - 1) // self.block_size):
+            key = self._block_key(req, i, toks)
+            b = self.cache.lookup(key)
+            if b is not None and not bridged:
+                chain.append(("dev", b))
+            elif self.cache.lookup_host(key) is not None:
+                chain.append(("host", key))
+                bridged = True
+            else:
                 break
-            chain.append(b)
         return chain
 
     def admit(self, limit: int | None = None) -> list[Request]:
@@ -219,23 +247,60 @@ class Scheduler:
             toks = req.refill_tokens
             need = blocks_for(len(toks) + 1, self.block_size)
             shared = self._match(req, toks)
-            revive = sum(1 for b in shared if self.cache.refcount(b) == 0)
-            if self.cache.num_free - revive < need - len(shared):
+            dev = [b for t, b in shared if t == "dev"]
+            revive = sum(1 for b in dev if self.cache.refcount(b) == 0)
+            # host hits still consume a device block each (the swap-in
+            # target), so only DEV hits reduce the allocation demand
+            if self.cache.num_free - revive < need - len(dev):
                 break
             self.waiting.popleft()
+            req.bridged = False
             slot = heapq.heappop(self._free_slots)
-            for b in shared:
-                self.cache.share(b)
-            blocks = shared + [self.cache.alloc()
-                               for _ in range(need - len(shared))]
+            # share every dev hit BEFORE any allocation: a refcount-0 hit
+            # deep in the chain must not be reclaimed (and spilled out from
+            # under us) by the swap-in targets allocated for earlier blocks
+            for t, x in shared:
+                if t == "dev":
+                    self.cache.share(x)
+            blocks: list[int] = []
+            truncated = False
+            for t, x in shared:
+                if truncated:
+                    if t == "dev":
+                        self.cache.free([x])   # undo the guard share
+                elif t == "dev":
+                    blocks.append(x)
+                else:
+                    b = self.cache.swap_in(x)
+                    if b is None:
+                        # host-evicted between match and claim: the chain
+                        # breaks here; deeper blocks re-prefill instead
+                        # (a swap-in target alloc becomes a fresh alloc —
+                        # the feasibility arithmetic above still holds)
+                        truncated = True
+                    else:
+                        blocks.append(b)
+                        req.bridged = True
+            nshared = len(blocks)
+            if truncated and self.cache.num_free < need - nshared:
+                # truncation invalidated the feasibility check (deeper dev
+                # hits were freed, not kept — a chain must be contiguous):
+                # roll the whole admission back and retry next step.  The
+                # already-swapped-in blocks stay indexed on DEVICE, so the
+                # retry matches them as dev hits.
+                self.cache.free(blocks)
+                heapq.heappush(self._free_slots, slot)
+                self.waiting.appendleft(req)
+                break
+            blocks += [self.cache.alloc() for _ in range(need - nshared)]
             self._blocks[slot] = blocks
             self.tables[slot, :] = self.cache.null_block
             self.tables[slot, :need] = blocks
             req.slot = slot
-            req.cache_len = len(shared) * self.block_size
+            req.cache_len = nshared * self.block_size
             req.prefill_len = len(toks)
             req.shared_rows = req.cache_len
-            req.registered = len(shared)    # matched blocks already indexed
+            req.registered = nshared        # matched blocks already indexed
             self.shared_rows_total += req.cache_len
             self.running[slot] = req
             self._admit_order.append(slot)
@@ -260,19 +325,33 @@ class Scheduler:
             return 0                       # tail already started: rows final
         bs = self.block_size
         have = req.cache_len // bs
-        chain = self._match(req, req.refill_tokens)
-        if len(chain) <= have:
+        # resume the match walk past the already-shared prefix, carrying the
+        # admission's bridge state: once this request claimed a host block it
+        # may only extend through further host hits (``_match``'s rule)
+        ext = self._match(req, req.refill_tokens, start=have,
+                          bridged=req.bridged)
+        if not ext:
             return 0
         blocks = self._blocks[req.slot]
-        for i in range(have, len(chain)):
-            self.cache.share(chain[i])
-            self.cache.free([blocks[i]])
-            blocks[i] = chain[i]
-            self.tables[req.slot, i] = chain[i]
-        gained = (len(chain) - have) * bs
-        req.cache_len = len(chain) * bs
+        upto = have
+        for off, (t, x) in enumerate(ext):
+            i = have + off
+            if t == "dev":
+                self.cache.share(x)
+                self.cache.free([blocks[i]])
+                blocks[i] = x
+                self.tables[req.slot, i] = x
+            elif self.cache.swap_in(x, into=blocks[i]) is None:
+                break                      # host-evicted: chain ends here
+            else:
+                # (host hit streams into the request's OWN fresh block —
+                # unwritten and unindexed, so no replacement needed)
+                req.bridged = True
+            upto = i + 1
+        gained = (upto - have) * bs
+        req.cache_len = upto * bs
         req.shared_rows = req.cache_len
-        req.registered = max(req.registered, len(chain))
+        req.registered = max(req.registered, upto)
         self.shared_rows_total += gained
         return gained
 
@@ -327,9 +406,20 @@ class Scheduler:
 
     def _preempt(self, slot: int) -> Request:
         req = self.running[slot]
+        # swap-preemption vs recompute-preemption is a property of the
+        # MEMORY system, not of this method: with a host tier the victim's
+        # freed blocks spill (still-indexed) to host when reclaimed, and
+        # re-admission swaps them back instead of re-prefilling.  Classify
+        # by whether the victim has indexed blocks a swap could preserve
+        # (registered > 0 — checked BEFORE the release resets it).
+        swap = (self.cache.host is not None and self.prefix_cache
+                and req.registered > 0)
+        self.metrics.inc(
+            "serve.preempt.swap" if swap else "serve.preempt.recompute")
         if self.tracer.enabled:
             self.tracer.instant("serve.preempt", cat="serve", args={
-                "rid": req.rid, "slot": slot, "cache_len": req.cache_len})
+                "rid": req.rid, "slot": slot, "cache_len": req.cache_len,
+                "swap": swap})
         self._release(slot)
         req.preemptions += 1
         req.slot = -1
@@ -337,7 +427,9 @@ class Scheduler:
         req.prefill_len = 0
         req.shared_rows = 0
         req.registered = 0
-        req.stash = None               # KV dropped -> recompute on readmission
+        req.stash = None               # prefill stash dropped; indexed KV
+        #                                survives in the tiered prefix index
+        #                                (device until reclaimed, then host)
         self.waiting.appendleft(req)   # resume FIRST (cf. partial rollout)
         return req
 
@@ -407,3 +499,11 @@ class Scheduler:
             assert cache._block_key.get(b) == key, (b, key)
             assert cache.refcount(b) > 0 or b in cache._free_set, \
                 f"indexed block {b} neither referenced nor free-cached"
+        if cache.host is not None:
+            # tiered index exclusivity: a prefix key resolves in exactly
+            # one tier, so no device block is ever simultaneously
+            # free-deque-live, device-indexed AND host-resident (the
+            # double-home state spill/swap-in must never create)
+            both = set(cache._index) & set(cache.host._index)
+            assert not both, f"{len(both)} key(s) resident in both tiers"
+            cache.host.check_consistent()

@@ -1,0 +1,343 @@
+"""Host-memory KV tier (repro.serve.host_tier): swap, don't recompute.
+
+The contracts under test:
+
+  * tier store — ``HostKVTier`` round-trips block bytes exactly (spill is
+    ``device_get``, swap-in is ``device_put``; no arithmetic touches the
+    rows), evicts LRU when full, and one prefix key lives in exactly one
+    tier at a time;
+  * spill policy — ``PagedKVCache.alloc()`` spills only PREFILL-provenance
+    blocks on reclaim; decode-tainted blocks (``mark_decode_write``) are
+    dropped exactly as without the tier;
+  * bit-identity — greedy gen AND gen_logp are bitwise invariant to the
+    tier being on or off, across preemptions, budget suspends and
+    mid-sequence resumes (the tier's headline contract: swapped bytes ==
+    the bytes recompute would have produced);
+  * the win — with the pool starved, swap re-admission issues strictly
+    fewer prefill tokens than recompute re-admission;
+  * footprint — the tier adds ZERO device memory: pool shapes are
+    identical with and without it, and the store is host numpy;
+  * integration — engine stats expose the ``serve.swap.*`` counters, a
+    params change flushes the host index, the trainer knob
+    (``RLConfig.serve_host_tier_blocks``) reaches the engine.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import build_model
+from repro.serve.engine import ServingEngine
+from repro.serve.host_tier import HostKVTier
+from repro.serve.paged_cache import PagedKVCache, prefix_key
+
+TOK = ByteTokenizer()
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("yi-6b").replace(dtype="float32", remat=False)
+    m = build_model(cfg)
+    params = m.init(cfg, jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _prompts(b, pl, seed=0):
+    return np.random.RandomState(seed).randint(0, 250, (b, pl)).astype(np.int32)
+
+
+def _engine(cfg, max_new, **kw):
+    return ServingEngine(cfg, max_new=max_new, eos_id=TOK.eos_id,
+                         pad_id=TOK.pad_id, greedy=True, **kw)
+
+
+def _rows(cfg, bs, seed):
+    shp = (cfg.num_layers, bs, cfg.num_kv_heads, cfg.head_dim)
+    r = np.random.RandomState(seed)
+    return (jnp.asarray(r.randn(*shp).astype(np.float32)),
+            jnp.asarray(r.randn(*shp).astype(np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# tier store: async roundtrip, LRU, key exclusivity
+# ---------------------------------------------------------------------------
+
+def test_put_take_roundtrip_byte_exact(dense_setup):
+    """Spill -> host store -> staging -> swap-in reproduces the device
+    block's bytes exactly, through the async engine's full path."""
+    cfg, _, _ = dense_setup
+    tier = HostKVTier(cfg, num_blocks=2, block_size=4)
+    k, v = _rows(cfg, 4, seed=0)
+    key = prefix_key(b"", np.arange(4))
+    tier.put(key, k, v)
+    tier.swap.drain()
+    assert len(tier) == 1 and tier.lookup(key) is not None
+    stage = tier.take(key)
+    assert stage is not None
+    flat = jnp.arange(4, dtype=jnp.int32)
+    tier.swap.submit_in(flat, stage)
+    tier.swap.drain()
+    [(got_flat, got_k, got_v)] = tier.swap.pop_ready()
+    np.testing.assert_array_equal(np.asarray(got_flat), np.asarray(flat))
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(k))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(v))
+    assert tier.lookup(key) is None, "take() must drop the index entry"
+    tier.check_consistent()
+    tier.close()
+
+
+def test_lru_eviction_and_recency_refresh(dense_setup):
+    """A full store evicts the least-recently-USED key; lookup refreshes
+    recency; duplicate put of a resident key is a no-op."""
+    cfg, _, _ = dense_setup
+    tier = HostKVTier(cfg, num_blocks=2, block_size=4)
+    keys = [prefix_key(b"", np.arange(4) + i) for i in range(3)]
+    k, v = _rows(cfg, 4, seed=1)
+    tier.put(keys[0], k, v)
+    tier.put(keys[1], k, v)
+    assert tier.lookup(keys[0]) is not None     # refresh: k0 now hottest
+    tier.put(keys[2], k, v)                     # evicts k1 (the LRU)
+    assert tier.lookup(keys[1]) is None
+    assert tier.lookup(keys[0]) is not None
+    assert tier.lookup(keys[2]) is not None
+    assert tier.metrics.value("serve.swap.host_evictions") == 1
+    before = tier.metrics.value("serve.swap.out_blocks")
+    tier.put(keys[0], k, v)                     # already resident: no-op
+    assert tier.metrics.value("serve.swap.out_blocks") == before
+    tier.flush()
+    assert len(tier) == 0
+    tier.check_consistent()
+    tier.close()
+
+
+def test_host_tier_rejects_bad_sizes(dense_setup):
+    cfg, _, _ = dense_setup
+    with pytest.raises(ValueError):
+        HostKVTier(cfg, num_blocks=0, block_size=4)
+    tier = HostKVTier(cfg, num_blocks=2, block_size=8)
+    with pytest.raises(ValueError):
+        PagedKVCache(cfg, num_blocks=4, block_size=4,
+                     max_blocks_per_seq=4, host=tier)
+    tier.close()
+
+
+# ---------------------------------------------------------------------------
+# cache integration: spill on reclaim, provenance filter, swap-in
+# ---------------------------------------------------------------------------
+
+def test_reclaim_spills_and_swapin_restores_bits(dense_setup):
+    """An indexed block's rows survive reclaim in the host tier and come
+    back bit-exact via swap_in; the key moves between tiers, never living
+    in both."""
+    cfg, _, _ = dense_setup
+    tier = HostKVTier(cfg, num_blocks=4, block_size=4)
+    pc = PagedKVCache(cfg, num_blocks=2, block_size=4,
+                      max_blocks_per_seq=2, host=tier)
+    k, v = _rows(cfg, 4, seed=2)
+    key = prefix_key(b"", np.arange(4))
+    b = pc.alloc()
+    rows = pc._block_rows(b)
+    pc.pool_k = pc.pool_k.at[:, rows].set(k)
+    pc.pool_v = pc.pool_v.at[:, rows].set(v)
+    pc.register(key, b)
+    pc.free([b])
+    # reclaim every block: the indexed one spills instead of dropping
+    c1, c2 = pc.alloc(), pc.alloc()
+    assert pc.lookup(key) is None and pc.lookup_host(key) is not None
+    pc.free([c1])
+    b2 = pc.swap_in(key)
+    assert b2 is not None
+    assert pc.lookup(key) == b2 and pc.lookup_host(key) is None
+    np.testing.assert_array_equal(
+        np.asarray(pc.pool_k[:, pc._block_rows(b2)]), np.asarray(k))
+    np.testing.assert_array_equal(
+        np.asarray(pc.pool_v[:, pc._block_rows(b2)]), np.asarray(v))
+    # a missing key is a clean miss, not an error
+    assert pc.swap_in(prefix_key(b"", np.arange(4) + 9)) is None
+    tier.close()
+
+
+def test_decode_tainted_blocks_never_spill(dense_setup):
+    """A block a decode step wrote into is dropped on reclaim (its bytes
+    are not prefill-reproducible); its prefill-provenance sibling spills."""
+    cfg, _, _ = dense_setup
+    tier = HostKVTier(cfg, num_blocks=4, block_size=4)
+    pc = PagedKVCache(cfg, num_blocks=2, block_size=4,
+                      max_blocks_per_seq=2, host=tier)
+    ka, kb = (prefix_key(b"", np.arange(4) + i) for i in range(2))
+    a, b = pc.alloc(), pc.alloc()
+    pc.register(ka, a)
+    pc.register(kb, b)
+    pc.mark_decode_write(b)
+    pc.mark_decode_write(pc.null_block)     # null-block writes are inert
+    pc.free([a, b])
+    pc.alloc(), pc.alloc()                  # reclaim both
+    assert pc.lookup_host(ka) is not None, "prefill block should spill"
+    assert pc.lookup_host(kb) is None, "decode-tainted block must not spill"
+    assert not pc._decode_written, "taint must die with the content"
+    tier.close()
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: tier on == tier off, under preemption + suspend/resume
+# ---------------------------------------------------------------------------
+
+def _sweep(cfg, params, host_blocks):
+    """Deterministic starved-pool workload: staggered arrivals, preemptions,
+    budget suspends with mid-sequence resume.  No prefill chunking — swap-in
+    registration timing matches recompute registration timing only when the
+    whole tail prefills in one admission step (docs/serving.md)."""
+    pl, mn = 12, 10
+    pool = [p for p in _prompts(3, pl, seed=21)]
+    eng = _engine(cfg, mn, max_slots=3, block_size=4, num_blocks=14,
+                  max_seq_len=pl + mn, host_tier_blocks=host_blocks)
+    arrivals = [(0, 0), (0, 1), (1, 2), (2, 0), (3, 1), (3, 0), (5, 2),
+                (7, 1)]
+    outs, steps = [], 0
+    while arrivals or not eng.sched.idle:
+        while arrivals and arrivals[0][0] <= steps:
+            eng.submit(pool[arrivals.pop(0)[1]])
+        outs.extend(eng.step(params))
+        eng.sched.check_invariants()
+        steps += 1
+        assert steps < 500
+    budgets = [2, 5, 3, 4]
+    pending = set()
+    for i, bud in enumerate(budgets):
+        pending.add(eng.submit(pool[i % 3], max_new=mn, budget=bud))
+    rounds = 0
+    while pending:
+        finished, resum = eng.run_to_budget(params)
+        eng.sched.check_invariants()
+        for o in finished:
+            pending.discard(o.rid)
+            outs.append(o)
+        for req in resum:
+            pending.discard(req.rid)
+            pending.add(eng.submit(req.prompt, generated=req.generated,
+                                   max_new=mn - len(req.generated),
+                                   budget=budgets[rounds % 4]))
+        rounds += 1
+        assert rounds <= 16
+    stats = eng.stats()
+    eng.close()
+    return outs, stats
+
+
+def test_greedy_bitwise_identical_tier_on_off(dense_setup):
+    """THE tier contract: the same workload, pool starved into preemptions
+    and suspend/resume churn, produces bitwise-identical greedy tokens AND
+    logprobs with the host tier on vs off — swapped-in bytes are exactly
+    the bytes recompute would have written."""
+    cfg, _, params = dense_setup
+    off, off_stats = _sweep(cfg, params, 0)
+    on, on_stats = _sweep(cfg, params, 24)
+    assert off_stats["preemptions"] > 0, "pool was never starved"
+    assert on_stats["swap_in_blocks"] > 0, "tier never exercised"
+    assert on_stats["preempt_swap"] > 0
+    d_off = {o.rid: o for o in off}
+    d_on = {o.rid: o for o in on}
+    assert sorted(d_off) == sorted(d_on)
+    for rid in d_off:
+        np.testing.assert_array_equal(np.asarray(d_off[rid].gen),
+                                      np.asarray(d_on[rid].gen))
+        np.testing.assert_array_equal(d_off[rid].gen_logp,
+                                      d_on[rid].gen_logp)
+
+
+def test_swap_readmission_cheaper_than_recompute(dense_setup):
+    """The tentpole win: re-admitting a preempted request via swap-in
+    issues strictly fewer prefill tokens than recompute re-admission."""
+    cfg, _, params = dense_setup
+    off, off_stats = _sweep(cfg, params, 0)
+    on, on_stats = _sweep(cfg, params, 24)
+    assert on_stats["readmit_prefill_tokens"] < \
+        off_stats["readmit_prefill_tokens"]
+    # preemption classification follows the memory system
+    assert off_stats["preempt_swap"] == 0
+    assert off_stats["preempt_recompute"] == off_stats["preemptions"]
+    assert on_stats["preempt_swap"] > 0
+    # byte counters are exact multiples of the block payload
+    probe = HostKVTier(cfg, num_blocks=1, block_size=4)
+    bb = probe.block_bytes
+    probe.close()
+    assert on_stats["swap_out_bytes"] == on_stats["swap_out_blocks"] * bb
+    assert on_stats["swap_in_bytes"] == on_stats["swap_in_blocks"] * bb
+    assert off_stats["swap_out_blocks"] == 0
+    assert off_stats["host_tier_blocks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# footprint + config plumbing
+# ---------------------------------------------------------------------------
+
+def test_device_pool_footprint_unchanged(dense_setup):
+    """The tier must cost ZERO device memory: identical pool shapes with
+    and without it, and the store lives in host numpy."""
+    cfg, _, params = dense_setup
+    prompt = _prompts(1, 8, seed=3)[0]
+    shapes = {}
+    for host in (0, 16):
+        eng = _engine(cfg, 4, max_slots=2, block_size=4, num_blocks=6,
+                      max_seq_len=12, host_tier_blocks=host)
+        eng.submit(prompt)
+        eng.drain(params)
+        shapes[host] = (eng.cache.pool_k.shape, eng.cache.pool_v.shape)
+        if host:
+            assert isinstance(eng.host_tier.store_k, np.ndarray)
+            assert isinstance(eng.host_tier.store_v, np.ndarray)
+            assert eng.host_tier.host_bytes == 2 * eng.host_tier.store_k.nbytes
+        eng.close()
+    assert shapes[0] == shapes[16]
+
+
+def test_host_tier_requires_prefix_cache(dense_setup):
+    cfg, _, _ = dense_setup
+    with pytest.raises(ValueError, match="prefix_cache"):
+        _engine(cfg, 4, max_slots=2, block_size=4,
+                prefix_cache=False, host_tier_blocks=8)
+
+
+def test_params_change_flushes_host_tier(dense_setup):
+    """Stale-weights KV must never swap back in: a params change empties
+    the host index along with the device index."""
+    cfg, _, params = dense_setup
+    eng = _engine(cfg, 10, max_slots=3, block_size=4, num_blocks=14,
+                  max_seq_len=22, host_tier_blocks=24)
+    for p in _prompts(3, 12, seed=21):
+        for _ in range(2):
+            eng.submit(p)
+    eng.drain(params)
+    assert len(eng.host_tier) > 0, "workload never spilled"
+    swapped = eng.stats()["swap_in_blocks"]
+    params2 = jax.tree_util.tree_map(lambda a: a + 0, params)
+    # one request, no pool pressure: the only way a swap-in could happen
+    # now is a STALE host hit surviving the weights change
+    eng.submit(_prompts(3, 12, seed=21)[0])
+    eng.drain(params2)
+    assert eng.stats()["swap_in_blocks"] == swapped, \
+        "stale-weights host KV satisfied a match after the flush"
+    eng.close()
+
+
+def test_trainer_knob_reaches_engine():
+    """RLConfig.serve_host_tier_blocks flows through ActorWorker to the
+    serving engine."""
+    from repro.configs.base import RLConfig
+    from repro.core.trainer import GRPOTrainer
+    from repro.data.prompts import PromptDataset, pattern_task
+
+    cfg = get_smoke_config("yi-6b").replace(dtype="float32", remat=False)
+    rl = RLConfig(num_generations=2, max_prompt_len=12, max_response_len=8,
+                  rollout_engine="serving", serve_max_slots=4,
+                  serve_block_size=4, serve_host_tier_blocks=8)
+    ds = PromptDataset(pattern_task(), max_prompt_len=rl.max_prompt_len,
+                       seed=0)
+    tr = GRPOTrainer(cfg, rl, ds, num_nodes=2, seed=0)
+    tr.iteration(1)
+    eng = tr.actor.engine
+    assert isinstance(eng, ServingEngine)
+    assert eng.host_tier is not None
+    assert eng.stats()["host_tier_blocks"] == 8

@@ -332,11 +332,15 @@ def test_params_change_flushes_prefix_index(dense_setup):
 # randomized admit / evict / resume sweep — invariants after every step
 # ---------------------------------------------------------------------------
 
-def test_randomized_admit_evict_resume_sweep(dense_setup):
+@pytest.mark.parametrize("host_blocks", [0, 24])
+def test_randomized_admit_evict_resume_sweep(dense_setup, host_blocks):
     """Duplicate-heavy traffic against a starved pool, submissions arriving
     mid-flight, budget suspends and mid-sequence resumes: refcount/index
     invariants hold after EVERY engine step and every request finishes with
-    the sync engine's greedy tokens."""
+    the sync engine's greedy tokens.  Runs tier-less and with the host KV
+    tier attached — the host variant additionally exercises the tiered
+    index exclusivity + host slot invariants (``check_invariants`` covers
+    both tiers when ``cache.host`` is set)."""
     cfg, _, params = dense_setup
     pl, mn = 12, 10
     rng = np.random.RandomState(11)
@@ -345,7 +349,8 @@ def test_randomized_admit_evict_resume_sweep(dense_setup):
                          pad_id=TOK.pad_id, greedy=True)
     ref = sync.generate(params, np.stack(pool), jax.random.PRNGKey(5))
     cont = _engine(cfg, mn, max_slots=3, block_size=4, num_blocks=14,
-                   max_seq_len=pl + mn, prefill_chunk=5)
+                   max_seq_len=pl + mn, prefill_chunk=5,
+                   host_tier_blocks=host_blocks)
 
     # phase 1: staggered arrivals, stepped by hand, invariants every step
     arrivals = [int(rng.randint(0, 8)) for _ in range(8)]
@@ -393,6 +398,9 @@ def test_randomized_admit_evict_resume_sweep(dense_setup):
     assert cont.cache.num_free == cont.cache.num_blocks
     assert cont.shared_prefill_tokens > 0, "sweep never hit the prefix cache"
     assert preempted > 0, "pool was never starved"
+    if host_blocks:
+        assert cont.stats()["swap_out_blocks"] > 0, "sweep never spilled"
+        cont.close()
 
 
 # ---------------------------------------------------------------------------

@@ -38,6 +38,7 @@ CI_EXECUTED = [
 # scripts CI must both execute and document (same agreement contract)
 CI_SCRIPTS = [
     "tools/trace_report.py",           # trace-smoke step (Perfetto export)
+    "examples/serve.py",               # serve-demo smoke (host-tier swap)
 ]
 
 # docs that must exist by name (load-bearing: other checks reference them)

@@ -11,10 +11,14 @@ on any machine the trace file lands on):
 
 ``--expect a,b,c`` asserts that every named graph node appears as a
 ``stage.<name>`` span — CI's trace smoke uses it to prove the whole GRPO
-graph made it into the trace.  Exit status: 0 ok, 1 empty/missing.
+graph made it into the trace.  ``--expect-spans a,b,c`` asserts plain span
+names (any category, "X" events) — CI's serving smoke uses it to prove the
+host-tier swap engine traced its copies (``serve.swap.out`` /
+``serve.swap.in``).  Exit status: 0 ok, 1 empty/missing.
 
 Usage:
     python tools/trace_report.py run.trace.json [--expect n1,n2,...]
+                                 [--expect-spans s1,s2,...]
 """
 from __future__ import annotations
 
@@ -81,6 +85,9 @@ def main(argv=None) -> int:
     ap.add_argument("--expect", default=None, metavar="N1,N2,...",
                     help="comma-separated graph-node names that must appear "
                     "as stage.<name> spans (exit 1 listing any missing)")
+    ap.add_argument("--expect-spans", default=None, metavar="S1,S2,...",
+                    help="comma-separated span names that must appear as "
+                    "duration events (exit 1 listing any missing)")
     args = ap.parse_args(argv)
 
     events = load_events(args.trace)
@@ -124,6 +131,14 @@ def main(argv=None) -> int:
                   f"{missing}", file=sys.stderr)
             return 1
         print(f"\nall {len(want)} expected graph nodes present")
+    if args.expect_spans:
+        want = [w for w in
+                (p.strip() for p in args.expect_spans.split(",")) if w]
+        missing = [w for w in want if w not in spans]
+        if missing:
+            print(f"\nMISSING spans: {missing}", file=sys.stderr)
+            return 1
+        print(f"all {len(want)} expected spans present")
     return 0
 
 
