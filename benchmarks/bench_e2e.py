@@ -11,7 +11,6 @@ Reports Eq. (5) throughput and the dataflow overheads that differ.
 """
 from __future__ import annotations
 
-import jax
 
 from repro.configs import get_smoke_config
 from repro.configs.base import RLConfig

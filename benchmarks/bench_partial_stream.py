@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.configs.base import ModelConfig, RLConfig
 from repro.core.partial import PartialRolloutTrainer

@@ -12,12 +12,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core.resharding import Resharder, tree_device_bytes
+from repro.core.resharding import Resharder
 from repro.launch.mesh import make_mesh
 from repro.launch.specs import params_structs
 from repro.models.model import build_model
 from repro.sharding import param_specs
-from jax.sharding import PartitionSpec as P
 
 
 def analytic_qwen32b():

@@ -4,7 +4,6 @@ only the blocks between the AUTOGEN markers — or, with --full, rewrites the
 whole §Roofline chapter)."""
 from __future__ import annotations
 
-import json
 import os
 import sys
 

@@ -18,7 +18,6 @@ engine-cap assertion message.  ~2 minutes on CPU.
 
     PYTHONPATH=src python examples/partial_rollout.py
 """
-import jax
 
 from repro.configs import get_smoke_config
 from repro.configs.base import RLConfig

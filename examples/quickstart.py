@@ -13,7 +13,6 @@ Runs in ~2 minutes on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 
 from repro.configs import get_smoke_config
 from repro.configs.base import RLConfig

@@ -19,7 +19,7 @@ import argparse
 import jax
 
 from repro.configs import ALL_ARCHS, get_smoke_config
-from repro.core.resharding import Resharder, tree_device_bytes
+from repro.core.resharding import Resharder
 from repro.launch.mesh import make_mesh
 from repro.models.model import build_model
 from repro.sharding import param_specs

@@ -31,7 +31,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import ALL_ARCHS, get_smoke_config
 from repro.core.resharding import Resharder

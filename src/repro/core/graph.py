@@ -239,7 +239,7 @@ class GraphExecutor:
     """
 
     def __init__(self, dock, rl, tracer=None):
-        self.dock = dock
+        self.dock = dock  # guarded-by: lock
         self.rl = rl
         self.lock = threading.RLock()
         # every dispatch emits one `stage.<node>` span (cat "graph") carrying
@@ -279,6 +279,8 @@ class GraphExecutor:
     def _ensure_layout(self, ctx, want: str) -> None:
         if want == self._layout:
             return
+        if not self.tracer.enabled:   # disabled tracer: no span-name f-string
+            return self._do_reshard(ctx, want)
         with self.tracer.span(f"reshard.to_{want}", cat="reshard"):
             self._do_reshard(ctx, want)
 
@@ -313,24 +315,29 @@ class GraphExecutor:
         the streaming poll while a generation stage drained — together the
         span records the fused-round membership the bare trace tuple
         cannot express."""
+        if not self.tracer.enabled:   # disabled tracer: no span-arg dict,
+            return self._run_stage(node, idxs, ctx)   # no f-string name
         span_args = {"node": node.name, "cluster_node": node.node,
                      "samples": len(idxs),
                      "idxs": [int(i) for i in idxs],
                      "round": round_, "fused": fused, "stream": stream}
         with self.tracer.span(f"stage.{node.name}", cat="graph",
                               args=span_args):
-            ins = self._fetch(node, idxs)
-            io = StageIO(node, idxs, ins, self)
-            out = node.fn(ctx, io)
-            if out:
-                for fld, rows in out.items():
-                    self.put(node, fld, io.idxs, rows)
-            with self.lock:
-                if io.consumed:
-                    self.dock.mark_consumed(node.name, io.consumed)
-                run = self._run
-                run.counts[node.name] = (run.counts.get(node.name, 0)
-                                         + len(io.consumed))
+            self._run_stage(node, idxs, ctx)
+
+    def _run_stage(self, node: StageNode, idxs, ctx) -> None:
+        ins = self._fetch(node, idxs)
+        io = StageIO(node, idxs, ins, self)
+        out = node.fn(ctx, io)
+        if out:
+            for fld, rows in out.items():
+                self.put(node, fld, io.idxs, rows)
+        with self.lock:
+            if io.consumed:
+                self.dock.mark_consumed(node.name, io.consumed)
+            run = self._run
+            run.counts[node.name] = (run.counts.get(node.name, 0)
+                                     + len(io.consumed))
 
     def _streaming(self, ctx, graph: RLGraph) -> bool:
         actor = getattr(ctx, "actor", None)
@@ -377,7 +384,9 @@ class GraphExecutor:
         """
         from concurrent.futures import ThreadPoolExecutor
 
-        missing = [s for s in graph.states() if s not in self.dock.controllers]
+        with self.lock:
+            missing = [s for s in graph.states()
+                       if s not in self.dock.controllers]
         if missing:
             raise ValueError(f"dock has no controllers for graph states "
                              f"{missing} — build the dock from graph.states()")

@@ -17,6 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+# Deployment envelope for the VMEM budget check (tools/analyze kernel-shapes):
+# largest config-zoo model has head_dim 128, 8 KV heads under 64 query heads
+# (group 8), and serve contexts up to 4k.  Worst case ~5 MiB/program.
+VMEM_BOUNDS = {"g": 8, "d": 128, "sk": 4096}
+
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool,
                   window: int, scale: float, sq: int, sk: int):
@@ -73,6 +78,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     """q: (B, Sq, H, d); k, v: (B, Sk, KV, d).  Returns (B, Sq, H, d)."""
     b, sq, h, d = q.shape
     _, sk, kv, _ = k.shape
+    assert h % kv == 0, f"query heads {h} must group evenly over {kv} KV heads"
     g = h // kv
     scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
     block_q = min(block_q, sq)

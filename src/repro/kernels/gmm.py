@@ -16,6 +16,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Deployment envelope for the VMEM budget check (tools/analyze kernel-shapes):
+# widest MoE d_model in the config zoo is 5120 (llama4-scout class).
+# Worst case: x 2.5 MiB + w 10 MiB + out 0.25 MiB per program.
+VMEM_BOUNDS = {"d": 5120}
+
 
 def _gmm_kernel(tile_gid_ref, x_ref, w_ref, o_ref):
     del tile_gid_ref  # consumed by the index_map

@@ -42,6 +42,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+# Deployment envelope for the VMEM budget check (tools/analyze kernel-shapes):
+# up to 64 query heads over 8 KV heads of head_dim 128, pool blocks of at
+# most 64 rows.  Worst case well under 1 MiB/program.
+VMEM_BOUNDS = {"h": 64, "hd": 128, "kv": 8, "block_size": 64}
+
 
 def _paged_decode_kernel(tbl_ref, pos_ref, q_ref, kn_ref, vn_ref, kb_ref,
                          vb_ref, o_ref, acc_ref, m_ref, l_ref, *,
@@ -114,11 +119,16 @@ def paged_decode_attention(q, k_new, v_new, pool_k, pool_v, tables, pos, *,
 
     Returns (n, S, H, hd).  The model's layer scan calls this with n == 1;
     the kernel is written for the general (layer, slot, kv_block) grid.
+
+    Pool rows R must be a multiple of block_size and H a multiple of KV.
     """
     from jax.experimental.pallas import tpu as pltpu
 
     n, s, h, hd = q.shape
     kv = pool_k.shape[2]
+    assert pool_k.shape[1] % block_size == 0, \
+        f"pool rows {pool_k.shape[1]} must be a multiple of {block_size}"
+    assert h % kv == 0, f"query heads {h} must group evenly over {kv} KV heads"
     g = h // kv
     _, mb = tables.shape
     scale = scale if scale is not None else 1.0 / float(np.sqrt(hd))

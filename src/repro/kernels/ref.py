@@ -179,7 +179,6 @@ def gmm(
     sum(group_sizes) == T.  Row t is multiplied by w[g(t)].
     """
     t = x.shape[0]
-    e = w.shape[0]
     # group id per row from cumulative sizes
     bounds = jnp.cumsum(group_sizes)
     row = jnp.arange(t)

@@ -12,6 +12,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Deployment envelope for the VMEM budget check (tools/analyze kernel-shapes):
+# widest config-zoo d_model is 8192 (qwen1.5-110b).
+VMEM_BOUNDS = {"d": 8192}
+
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -22,7 +26,7 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
 def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, *, eps: float = 1e-5,
-            block_rows: int = 256, interpret: bool = False) -> jnp.ndarray:
+            block_rows: int = 128, interpret: bool = False) -> jnp.ndarray:
     """x: (rows, d), w: (d,).  d should be a multiple of 128 on real TPU."""
     rows, d = x.shape
     block_rows = min(block_rows, rows)

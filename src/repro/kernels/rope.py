@@ -11,6 +11,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Deployment envelope for the VMEM budget check (tools/analyze kernel-shapes):
+# up to 64 heads of head_dim 128 in the config zoo.
+VMEM_BOUNDS = {"h": 64, "d": 128}
+
 
 def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)          # (1, bs, H, d)
@@ -26,9 +30,12 @@ def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray, *,
-               block_s: int = 256, interpret: bool = False) -> jnp.ndarray:
-    """x: (B, S, H, d); cos/sin: (B, S, d//2) (or broadcastable (1, S, d//2))."""
+               block_s: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """x: (B, S, H, d); cos/sin: (B, S, d//2) (or broadcastable (1, S, d//2)).
+
+    d must be even (rotate-half splits the feature dim in two)."""
     b, s, h, d = x.shape
+    assert d % 2 == 0, f"rotate-half RoPE needs an even head dim, got {d}"
     cos = jnp.broadcast_to(cos, (b, s, d // 2))
     sin = jnp.broadcast_to(sin, (b, s, d // 2))
     block_s = min(block_s, s)

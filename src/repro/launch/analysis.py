@@ -17,7 +17,6 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
-import numpy as np
 
 from repro.configs.base import TPU_V5E, HardwareConfig, ModelConfig
 

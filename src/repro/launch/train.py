@@ -32,6 +32,16 @@ def main() -> None:
     ap.add_argument("--max-response-len", type=int, default=16)
     ap.add_argument("--lr", type=float, default=2e-4)
     ap.add_argument("--kl-coef", type=float, default=1e-3)
+    ap.add_argument("--temperature", type=float, default=1.0,
+                    help="sampling temperature for rollout generation")
+    ap.add_argument("--clip-eps", type=float, default=0.2,
+                    help="PPO/GRPO ratio clip epsilon (DAPO uses "
+                         "clip_eps_high for the upper side)")
+    ap.add_argument("--serve-max-slots", type=int, default=0,
+                    help="serving engine slot count (0 = RLConfig default)")
+    ap.add_argument("--serve-block-size", type=int, default=0,
+                    help="paged KV cache block size in tokens "
+                         "(0 = RLConfig default)")
     ap.add_argument("--num-nodes", type=int, default=4)
     ap.add_argument("--no-transfer-dock", action="store_true")
     ap.add_argument("--no-allgather-swap", action="store_true")
@@ -92,6 +102,8 @@ def main() -> None:
         max_prompt_len=args.max_prompt_len,
         max_response_len=args.max_response_len,
         lr=args.lr, kl_coef=args.kl_coef,
+        temperature=args.temperature,
+        clip_eps=args.clip_eps,
         use_transfer_dock=not args.no_transfer_dock,
         use_allgather_swap=not args.no_allgather_swap,
         stage_fusion=not args.no_stage_fusion,
@@ -103,6 +115,10 @@ def main() -> None:
     )
     if args.rollout_engine:
         rl = rl.replace(rollout_engine=args.rollout_engine)
+    if args.serve_max_slots:
+        rl = rl.replace(serve_max_slots=args.serve_max_slots)
+    if args.serve_block_size:
+        rl = rl.replace(serve_block_size=args.serve_block_size)
     if args.trace:
         rl = rl.replace(trace_path=args.trace)
     if args.print_graph:

@@ -172,7 +172,6 @@ def ssd_step(x1, a1, B1, C1, state):
 
 def _proj_all(lp, cfg, xn):
     b, s, _ = xn.shape
-    h = cfg.ssm_nheads
     z = jnp.einsum("bsd,de->bse", xn, lp["wz"])
     xs = jnp.einsum("bsd,de->bse", xn, lp["wx"])
     Bm = jnp.einsum("bsd,de->bse", xn, lp["wB"])

@@ -36,9 +36,9 @@ class MetricsRegistry:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._counters: dict[str, int] = {}
-        self._gauges: dict[str, float] = {}
-        self._hists: dict[str, list[float]] = {}
+        self._counters: dict[str, int] = {}  # guarded-by: _lock
+        self._gauges: dict[str, float] = {}  # guarded-by: _lock
+        self._hists: dict[str, list[float]] = {}  # guarded-by: _lock
 
     # -- write --------------------------------------------------------------
     def inc(self, name: str, n: int = 1) -> None:

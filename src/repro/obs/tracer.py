@@ -72,10 +72,10 @@ class Tracer:
 
     def __init__(self, enabled: bool = False):
         self.enabled = enabled
-        self._events: list[dict] = []
+        self._events: list[dict] = []  # guarded-by: _lock
         self._lock = threading.Lock()
         self._epoch_ns = time.perf_counter_ns()
-        self._tids: dict[int, int] = {}
+        self._tids: dict[int, int] = {}  # guarded-by: _lock
 
     # -- clock / identity ---------------------------------------------------
     def _now(self) -> float:

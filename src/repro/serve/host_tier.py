@@ -63,7 +63,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
-from repro.obs import MetricsRegistry, get_tracer
+from repro.obs import NULL_SPAN, MetricsRegistry, get_tracer
 
 
 class SwapEngine:
@@ -85,9 +85,9 @@ class SwapEngine:
         self.tracer = tracer if tracer is not None else get_tracer()
         self._jobs: queue.Queue = queue.Queue(maxsize=depth)
         self._cond = threading.Condition()
-        self._pending = 0                  # submitted, not yet executed
-        self._ready: list[tuple] = []      # completed swap-ins: (flat, k, v)
-        self._error: BaseException | None = None
+        self._pending = 0                  # guarded-by: _cond — not yet run
+        self._ready: list[tuple] = []      # guarded-by: _cond — (flat, k, v)
+        self._error: BaseException | None = None  # guarded-by: _cond
         self._thread: threading.Thread | None = None
         # swap-in staging ring: `depth` preallocated host buffer pairs.
         # acquire_stage() blocks when all are owned by in-flight swap-ins —
@@ -170,7 +170,7 @@ class SwapEngine:
             self._thread.join(timeout=10.0)
         self._thread = None
 
-    def _raise_if_failed(self) -> None:
+    def _raise_if_failed(self) -> None:  # requires-lock: _cond
         if self._error is not None:
             err, self._error = self._error, None
             raise RuntimeError("KV swap worker failed") from err
@@ -201,9 +201,11 @@ class SwapEngine:
         tier, tr = self.tier, self.tracer
         if job[0] == "out":
             _, slot, dev_k, dev_v = job
-            with tr.span("serve.swap.out", cat="serve",
-                         args={"host_slot": slot,
-                               "bytes": tier.block_bytes}):
+            span = (tr.span("serve.swap.out", cat="serve",
+                            args={"host_slot": slot,
+                                  "bytes": tier.block_bytes})
+                    if tr.enabled else NULL_SPAN)
+            with span:
                 # device_get: jax array -> the store's preallocated rows
                 tier.store_k[slot][...] = np.asarray(dev_k)
                 tier.store_v[slot][...] = np.asarray(dev_v)
@@ -215,8 +217,10 @@ class SwapEngine:
                     tier._inflight_out[slot] = n
         else:
             _, flat_rows, stage = job
-            with tr.span("serve.swap.in", cat="serve",
-                         args={"bytes": tier.block_bytes}):
+            span = (tr.span("serve.swap.in", cat="serve",
+                            args={"bytes": tier.block_bytes})
+                    if tr.enabled else NULL_SPAN)
+            with span:
                 # device_put + MATERIALIZED copy: on CPU backends a plain
                 # device_put may alias the numpy staging buffer (zero-copy)
                 # or read it lazily under async dispatch, and the buffer is
@@ -261,9 +265,9 @@ class HostKVTier:
         self._index: OrderedDict[bytes, int] = OrderedDict()
         self._slot_key: dict[int, bytes] = {}
         self._free: deque[int] = deque(range(num_blocks))
-        # host slots with a spill still in flight (guarded by swap._cond):
+        # host slots with a spill still in flight:
         # take() must not read the store before the worker wrote it
-        self._inflight_out: dict[int, int] = {}
+        self._inflight_out: dict[int, int] = {}  # guarded-by: swap._cond
         self.swap = SwapEngine(self, depth=staging, tracer=tracer)
 
     def __len__(self) -> int:
@@ -362,7 +366,8 @@ class HostKVTier:
         assert not (used & free), f"host slot both used and free: {used & free}"
         assert len(free) == len(self._free), "duplicate free host slots"
         assert len(used) + len(free) == self.num_blocks, "host slot leak"
-        assert not self._inflight_out, "in-flight spill after drain"
+        with self.swap._cond:
+            assert not self._inflight_out, "in-flight spill after drain"
 
     def close(self) -> None:
         self.swap.close()

@@ -116,6 +116,12 @@ def gather_pool_ref(pool: jnp.ndarray, tables: jnp.ndarray,
     return pool[:, flat_indices(tables, block_size)]
 
 
+# Deployment envelope for the VMEM budget check (tools/analyze kernel-shapes):
+# pool blocks of at most 64 rows, 8 KV heads of head_dim 128 — one block of
+# each of the in/out specs is 256 KiB.
+VMEM_BOUNDS = {"block_size": 64, "kv": 8, "hd": 128}
+
+
 def _gather_block_kernel(tbl_ref, pool_ref, o_ref):
     del tbl_ref  # consumed by the index maps (scalar prefetch)
     o_ref[...] = pool_ref[...]

@@ -17,7 +17,6 @@ only; inner ops remain jit-sharded over the other axes).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,417 @@
+"""Tests for the contract analyzer (tools/analyze).
+
+Every pass gets a POSITIVE fixture (a planted violation it must find) and
+a NEGATIVE fixture (the compliant variant it must not flag), built as
+throwaway source trees with the repo's relative layout.  The final tests
+hold the shipped tree itself to the contract: running every pass over the
+real repo must produce nothing the shipped baseline does not explain.
+"""
+import sys
+import textwrap
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.analyze import (Project, apply_baseline,  # noqa: E402
+                           load_baseline, run_passes)
+from tools.analyze.core import PASSES, Finding  # noqa: E402
+
+
+def make_project(tmp_path, files: dict) -> Project:
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return Project(tmp_path)
+
+
+def rules(findings) -> list:
+    return sorted(f.rule_id for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# determinism (DET001 / DET002)
+# ---------------------------------------------------------------------------
+
+def test_determinism_flags_set_iteration_and_wall_clock(tmp_path):
+    project = make_project(tmp_path, {"src/repro/serve/mod.py": """\
+        import time
+
+        def order_leak():
+            s = {1, 2, 3}
+            out = []
+            for x in s:              # DET001: hash-order iteration
+                out.append(x)
+            listed = [x for x in s]  # DET001: order-sensitive comprehension
+            return out, listed
+
+        def stamp():
+            return time.time()       # DET002: wall clock
+        """})
+    found = run_passes(project, ["determinism"])
+    assert rules(found) == ["DET001", "DET001", "DET002"]
+
+
+def test_determinism_accepts_sorted_reducers_and_monotonic(tmp_path):
+    project = make_project(tmp_path, {"src/repro/core/mod.py": """\
+        import time
+
+        def ordered():
+            s = {1, 2, 3}
+            total = sum(x for x in s)      # order-free reducer
+            n = len(s)
+            out = [x for x in sorted(s)]   # sorted() launders the order
+            for x in sorted(s):
+                total += x
+            return total, n, out
+
+        def clock():
+            return time.perf_counter()     # monotonic: allowed
+        """})
+    assert run_passes(project, ["determinism"]) == []
+
+
+def test_determinism_scope_excludes_other_packages(tmp_path):
+    project = make_project(tmp_path, {"src/repro/launch/mod.py": """\
+        import time
+
+        def stamp():
+            return time.time()
+        """})
+    assert run_passes(project, ["determinism"]) == []
+
+
+# ---------------------------------------------------------------------------
+# locks (LOCK001 / LOCK002)
+# ---------------------------------------------------------------------------
+
+def test_locks_flags_unguarded_access_and_dead_lock(tmp_path):
+    project = make_project(tmp_path, {"src/repro/serve/mod.py": """\
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._items = []  # guarded-by: _lock
+
+            def add(self, x):
+                with self._lock:
+                    self._items.append(x)
+
+            def peek(self):
+                return self._items[-1]     # LOCK001: no lock held
+
+        class Dead:
+            def __init__(self):
+                self._mu = threading.Lock()
+                self._n = 0  # guarded-by: _mu — but nothing acquires _mu
+        """})
+    found = run_passes(project, ["locks"])
+    assert rules(found) == ["LOCK001", "LOCK002"]
+    lock1 = next(f for f in found if f.rule_id == "LOCK001")
+    assert "_items" in lock1.message
+
+
+def test_locks_accepts_guarded_confined_and_requires_lock(tmp_path):
+    project = make_project(tmp_path, {"src/repro/serve/mod.py": """\
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0  # guarded-by: _lock
+
+            def bump(self):
+                with self._lock:
+                    self._n += 1
+
+            def replay(self):  # thread-confined: test-only single thread
+                return self._n
+
+            def _bump_locked(self):  # requires-lock: _lock
+                self._n += 1
+        """})
+    assert run_passes(project, ["locks"]) == []
+
+
+def test_locks_supports_dotted_locks_of_member_objects(tmp_path):
+    project = make_project(tmp_path, {"src/repro/serve/mod.py": """\
+        class Tier:
+            def __init__(self, swap):
+                self.swap = swap
+                self._inflight = {}  # guarded-by: swap._cond
+
+            def busy(self):
+                with self.swap._cond:
+                    return bool(self._inflight)
+
+            def leak(self):
+                return len(self._inflight)   # LOCK001
+        """})
+    found = run_passes(project, ["locks"])
+    assert rules(found) == ["LOCK001"]
+    assert found[0].line == 11
+
+
+# ---------------------------------------------------------------------------
+# tracer-overhead (TRC001)
+# ---------------------------------------------------------------------------
+
+def test_overhead_flags_unguarded_allocation_in_hot_module(tmp_path):
+    project = make_project(tmp_path, {"src/repro/serve/engine.py": """\
+        class Engine:
+            def __init__(self, tracer):
+                self.tracer = tracer
+
+            def step(self, n):
+                self.tracer.instant("serve.step", args={"n": n})  # TRC001
+                with self.tracer.span(f"serve.run.{n}"):          # TRC001
+                    pass
+        """})
+    found = run_passes(project, ["tracer-overhead"])
+    assert rules(found) == ["TRC001", "TRC001"]
+
+
+def test_overhead_accepts_guard_idioms_and_constant_args(tmp_path):
+    project = make_project(tmp_path, {"src/repro/serve/engine.py": """\
+        NULL_SPAN = object()
+
+        class Engine:
+            def __init__(self, tracer):
+                self.tracer = tracer
+
+            def a_constant_only(self):
+                self.tracer.instant("serve.fixed")    # allocates nothing
+
+            def b_if_guard(self, n):
+                tr = self.tracer
+                if tr.enabled:
+                    tr.instant("serve.step", args={"n": n})
+
+            def c_early_return(self, n):
+                tr = self.tracer
+                if not tr.enabled:
+                    return self.work(n)
+                with tr.span("serve.step", args={"n": n}):
+                    return self.work(n)
+
+            def d_null_span(self, n):
+                tr = self.tracer
+                span = (tr.span("serve.io", args={"n": n})
+                        if tr.enabled else NULL_SPAN)
+                with span:
+                    return self.work(n)
+
+            def work(self, n):
+                return n
+        """})
+    assert run_passes(project, ["tracer-overhead"]) == []
+
+
+def test_overhead_scope_is_hot_modules_only(tmp_path):
+    project = make_project(tmp_path, {"src/repro/serve/cold.py": """\
+        class Report:
+            def __init__(self, tracer):
+                self.tracer = tracer
+
+            def emit(self, n):
+                self.tracer.instant("serve.report", args={"n": n})
+        """})
+    assert run_passes(project, ["tracer-overhead"]) == []
+
+
+# ---------------------------------------------------------------------------
+# kernel-shapes (KRN001..KRN004)
+# ---------------------------------------------------------------------------
+
+def test_kernels_flags_arity_rank_and_unbounded_dims(tmp_path):
+    project = make_project(tmp_path, {"src/repro/kernels/bad.py": """\
+        def launch(x, n):
+            return pl.pallas_call(
+                kern,
+                grid=(4, 4),
+                in_specs=[
+                    pl.BlockSpec((128, 128), lambda i: (i, 0)),       # KRN001
+                    pl.BlockSpec((128, 128), lambda i, j: (i,)),      # KRN001
+                    pl.BlockSpec((n, 128), lambda i, j: (i, j)),      # KRN004
+                ],
+                out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+            )(x)
+        """})
+    found = run_passes(project, ["kernel-shapes"])
+    assert rules(found) == ["KRN001", "KRN001", "KRN004"]
+
+
+def test_kernels_flags_unenforced_docstring_assumption(tmp_path):
+    project = make_project(tmp_path, {"src/repro/kernels/bad.py": """\
+        def launch(x):
+            \"\"\"x rows must be a multiple of 128.\"\"\"
+            return pl.pallas_call(
+                kern,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((128,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((128,), lambda i: (i,)),
+            )(x)
+        """})
+    found = run_passes(project, ["kernel-shapes"])
+    assert rules(found) == ["KRN002"]
+
+
+def test_kernels_flags_vmem_budget_overflow(tmp_path):
+    project = make_project(tmp_path, {"src/repro/kernels/bad.py": """\
+        def launch(x, block=4096):
+            return pl.pallas_call(
+                kern,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((block, 4096), lambda i, j: (i, j))],
+                out_specs=pl.BlockSpec((block, 4096), lambda i, j: (i, j)),
+            )(x)
+        """})
+    found = run_passes(project, ["kernel-shapes"])       # 2 x 64 MiB blocks
+    assert rules(found) == ["KRN003"]
+
+
+def test_kernels_accepts_bounded_enforced_kernel(tmp_path):
+    project = make_project(tmp_path, {"src/repro/kernels/good.py": """\
+        VMEM_BOUNDS = {"d": 1024}
+
+        def launch(x, d, block=128):
+            \"\"\"rows must be a multiple of block.\"\"\"
+            assert x.shape[0] % block == 0
+            return pl.pallas_call(
+                kern,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((block, d), lambda i, j: (i, j))],
+                out_specs=pl.BlockSpec((block, d), lambda i, j: (i, j)),
+            )(x)
+        """})
+    assert run_passes(project, ["kernel-shapes"]) == []
+
+
+def test_kernels_resolves_min_shrink_pattern(tmp_path):
+    project = make_project(tmp_path, {"src/repro/kernels/good.py": """\
+        def launch(x, rows, block=256):
+            block = min(block, rows)     # bound survives self-reference
+            return pl.pallas_call(
+                kern,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((block, 512), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((block, 512), lambda i: (i, 0)),
+            )(x)
+        """})
+    assert run_passes(project, ["kernel-shapes"]) == []
+
+
+# ---------------------------------------------------------------------------
+# drift (DRF001 / DRF002)
+# ---------------------------------------------------------------------------
+
+_DRIFT_BASE = """\
+    from dataclasses import dataclass
+
+    @dataclass
+    class RLConfig:
+        lr: float = 1e-5
+        mystery_knob: int = 3
+    """
+
+
+def test_drift_flags_unreachable_knob_and_uncataloged_name(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/configs/base.py": _DRIFT_BASE,
+        "src/repro/launch/train.py": "def main(lr):\n    return lr\n",
+        "docs/observability.md": "| `serve.steps` | counter |\n",
+        "src/repro/serve/mod.py": """\
+            def tick(metrics):
+                metrics.inc("serve.steps")
+                metrics.inc("serve.mystery_counter")   # DRF002
+            """,
+    })
+    found = run_passes(project, ["drift"])
+    assert rules(found) == ["DRF001", "DRF002"]
+    drf1 = next(f for f in found if f.rule_id == "DRF001")
+    assert "mystery_knob" in drf1.message
+    drf2 = next(f for f in found if f.rule_id == "DRF002")
+    assert "serve.mystery_counter" in drf2.message
+
+
+def test_drift_accepts_documented_knobs_and_cataloged_names(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/configs/base.py": _DRIFT_BASE,
+        "src/repro/launch/train.py": "def main(lr):\n    return lr\n",
+        "docs/knobs.md": "`mystery_knob` controls the mystery.\n",
+        "docs/observability.md": "| `serve.steps` | counter |\n",
+        "src/repro/serve/mod.py": """\
+            def tick(metrics, fast):
+                metrics.inc("serve.steps" if fast else "serve.steps")
+            """,
+    })
+    assert run_passes(project, ["drift"]) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline machinery
+# ---------------------------------------------------------------------------
+
+def test_baseline_suppresses_by_substring_and_reports_stale():
+    findings = [Finding("src/a.py", 10, "LOCK001", "`self._x` unguarded"),
+                Finding("src/a.py", 20, "LOCK001", "`self._y` unguarded")]
+    entries = [
+        {"rule": "LOCK001", "file": "src/a.py", "contains": "`self._x`",
+         "reason": "benign double-checked read"},
+        {"rule": "LOCK001", "file": "src/gone.py", "contains": "anything",
+         "reason": "stale"},
+    ]
+    kept, suppressed, stale = apply_baseline(findings, entries)
+    assert [f.line for f in kept] == [20]
+    assert [f.line for f in suppressed] == [10]
+    assert [e["file"] for e in stale] == ["src/gone.py"]
+
+
+def test_baseline_requires_reason(tmp_path):
+    bad = tmp_path / "baseline.json"
+    bad.write_text('[{"rule": "X", "file": "y", "contains": "z"}]')
+    try:
+        load_baseline(bad)
+    except ValueError as e:
+        assert "reason" in str(e)
+    else:
+        raise AssertionError("missing-reason baseline entry accepted")
+
+
+# ---------------------------------------------------------------------------
+# the shipped tree honors its own contracts
+# ---------------------------------------------------------------------------
+
+def test_all_five_passes_are_registered():
+    assert sorted(PASSES) == ["determinism", "drift", "kernel-shapes",
+                              "locks", "tracer-overhead"]
+    owned = sorted(r for p in PASSES.values() for r in p.rule_ids)
+    assert owned == ["DET001", "DET002", "DRF001", "DRF002", "KRN001",
+                     "KRN002", "KRN003", "KRN004", "LOCK001", "LOCK002",
+                     "TRC001"]
+
+
+def test_shipped_tree_clean_under_shipped_baseline():
+    project = Project(REPO_ROOT)
+    findings = run_passes(project)
+    entries = load_baseline(REPO_ROOT / "tools" / "analyze" / "baseline.json")
+    kept, _suppressed, stale = apply_baseline(findings, entries)
+    assert kept == [], "unsuppressed findings:\n" + "\n".join(
+        f.render() for f in kept)
+    assert stale == [], f"stale baseline entries: {stale}"
+
+
+def test_cli_exits_nonzero_on_findings(tmp_path):
+    from tools.analyze.__main__ import main
+    make_project(tmp_path, {"src/repro/serve/mod.py": """\
+        def order_leak():
+            s = {1, 2}
+            for x in s:
+                print(x)
+        """})
+    assert main(["--root", str(tmp_path), "--no-baseline"]) == 1
+    assert main(["--root", str(tmp_path), "--rule", "LOCK"]) == 0
+    assert main(["--list-rules"]) == 0

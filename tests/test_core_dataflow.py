@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.resharding import Resharder, per_device_bytes, tree_device_bytes
+from repro.core.resharding import Resharder, per_device_bytes
 from repro.core.transfer_dock import (CentralReplayBuffer, DispatchLedger,
                                       TransferDock, cv_gb, dispatch_time_s,
                                       tcv_gb, tcv_td_gb)
@@ -102,8 +102,6 @@ def test_metadata_requests_intranode_for_dock_cross_for_central():
 def test_dock_sharding_across_warehouses():
     dock = _dock(S=4)
     dock.put("x", list(range(8)), np.zeros((8, 10), np.float32), src_node=0)
-    sizes = [sum(len(v) for v in wh.store.get("x", {}).values() or [])
-             for wh in dock.warehouses]
     assert all(len(wh.store["x"]) == 2 for wh in dock.warehouses)
 
 

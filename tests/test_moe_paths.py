@@ -1,7 +1,6 @@
 """MoE implementation paths: the capacity-dispatch einsum and the GMM
 dropless path must agree when capacity admits every token."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -9,7 +9,7 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import grpo
-from repro.core.transfer_dock import (DispatchLedger, TransferDock, cv_gb,
+from repro.core.transfer_dock import (DispatchLedger, TransferDock,
                                       tcv_gb, tcv_td_gb)
 from repro.data.tokenizer import ByteTokenizer
 from repro.kernels import ops, ref

@@ -10,7 +10,6 @@ import pytest
 
 from repro.checkpoint import load_pytree, save_pytree
 from repro.configs import get_smoke_config
-from repro.configs.base import RLConfig
 from repro.core.rollout import RolloutEngine
 from repro.data.prompts import PromptDataset, arithmetic_task, pattern_task
 from repro.data.tokenizer import ByteTokenizer

@@ -3,7 +3,6 @@ import jax
 import numpy as np
 import pytest
 
-from repro.configs import get_smoke_config
 from repro.configs.base import ModelConfig, RLConfig
 from repro.core.trainer import GRPOTrainer
 from repro.data.prompts import PromptDataset, pattern_task

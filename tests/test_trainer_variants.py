@@ -1,6 +1,5 @@
 """PPO trainer + partial-rollout trainer integration tests."""
 import numpy as np
-import pytest
 
 from repro.configs.base import ModelConfig, RLConfig
 from repro.core.partial import PartialRolloutTrainer

@@ -1,0 +1,5 @@
+"""Repo tooling: docs checker, trace reporter, contract analyzer.
+
+``check_docs.py`` and ``trace_report.py`` are standalone scripts;
+``tools.analyze`` is a package (``python -m tools.analyze``).
+"""

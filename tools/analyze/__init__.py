@@ -1,0 +1,27 @@
+"""Contract-aware static analysis for this repo (``python -m tools.analyze``).
+
+Five passes over the source tree, each encoding an invariant the test
+suite can only probe dynamically:
+
+* ``determinism``     — DET001/DET002: no unordered-set iteration or
+  wall-clock/global-RNG in ``repro.serve``/``repro.core``.
+* ``locks``           — LOCK001/LOCK002: ``# guarded-by:`` annotations
+  verified lexically against ``with self.<lock>:`` blocks.
+* ``tracer-overhead`` — TRC001: no tracer-argument allocation outside an
+  ``.enabled`` guard in the hot-loop modules.
+* ``kernel-shapes``   — KRN001..KRN004: Pallas grid/BlockSpec agreement,
+  docstring assumptions enforced in code, VMEM budget respected.
+* ``drift``           — DRF001/DRF002: RLConfig knobs reachable from
+  train.py/docs; emitted ``serve.*``/``dock.*`` names cataloged in
+  docs/observability.md.
+
+See docs/analysis.md for the rule catalog and the baseline workflow.
+Importing this package registers all passes.
+"""
+# registration imports: each pass module's @register call populates PASSES
+from tools.analyze import determinism, drift, kernels, locks, overhead  # noqa: F401
+from tools.analyze.core import (Finding, Project, apply_baseline,  # noqa: F401
+                                load_baseline, run_passes)
+
+__all__ = ["Finding", "Project", "apply_baseline", "load_baseline",
+           "run_passes"]

@@ -1,0 +1,81 @@
+"""CLI: ``python -m tools.analyze [--rule ID] [--baseline PATH]``.
+
+Runs every registered pass (or the ones selected with ``--rule``, which
+accepts a pass name or a rule-id prefix), subtracts the baseline, prints
+one ``file:line: RULE message`` per unsuppressed finding, and exits
+nonzero when any remain — the CI ``analysis`` job is exactly this
+invocation.  ``--no-baseline`` shows everything; ``--list-rules`` prints
+the registry.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.analyze.core import (PASSES, Project, apply_baseline,
+                                load_baseline, run_passes)
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def _select_passes(rule: str | None) -> list[str] | None:
+    if rule is None:
+        return None
+    if rule in PASSES:
+        return [rule]
+    matched = [name for name, p in PASSES.items()
+               if any(r.startswith(rule) for r in p.rule_ids)]
+    if not matched:
+        known = sorted(r for p in PASSES.values() for r in p.rule_ids)
+        sys.exit(f"unknown rule or pass {rule!r}; passes: "
+                 f"{sorted(PASSES)}; rules: {known}")
+    return matched
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="contract-aware static analysis (see docs/analysis.md)")
+    ap.add_argument("--rule", default=None,
+                    help="run only one pass (by name) or the passes owning "
+                         "a rule-id prefix (e.g. LOCK, KRN003)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="suppression file (default: the shipped baseline)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report suppressed findings too")
+    ap.add_argument("--root", default=str(REPO_ROOT),
+                    help="tree to analyze (default: this repo)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(PASSES):
+            p = PASSES[name]
+            print(f"{name:16s} {', '.join(p.rule_ids):30s} {p.doc}")
+        return 0
+
+    project = Project(args.root)
+    findings = run_passes(project, _select_passes(args.rule))
+
+    entries = [] if args.no_baseline else load_baseline(args.baseline)
+    kept, suppressed, stale = apply_baseline(findings, entries)
+
+    # rule filter may narrow within a pass (e.g. KRN003 of kernel-shapes)
+    if args.rule and args.rule not in PASSES:
+        kept = [f for f in kept if f.rule_id.startswith(args.rule)]
+
+    for f in kept:
+        print(f.render())
+    for e in stale:
+        print(f"warning: stale baseline entry matched nothing: "
+              f"{e['rule']} {e['file']} ({e['reason']})", file=sys.stderr)
+    n_pass = len(_select_passes(args.rule) or PASSES)
+    print(f"tools.analyze: {len(kept)} finding(s), {len(suppressed)} "
+          f"baseline-suppressed, {n_pass} pass(es)", file=sys.stderr)
+    return 1 if kept else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,198 @@
+"""Shared machinery for the contract analyzer: Finding, Project, registry.
+
+Every pass is a function ``pass_fn(project) -> list[Finding]`` registered
+under a short name with the rule ids it may emit.  Passes operate on a
+``Project`` — a lazily-parsed view of one source tree — so tests can run
+any pass against a throwaway fixture tree with the same relative layout as
+the repo (``src/repro/serve/...``) and get exactly the CI behavior.
+
+The baseline file (``tools/analyze/baseline.json``) suppresses DELIBERATE
+exceptions.  Entries match on ``rule`` + ``file`` + a ``contains``
+substring of the message — never on line numbers, so unrelated churn in a
+file cannot silently detach a suppression — and every entry must carry a
+``reason``.  Stale entries (matching nothing) are reported so the baseline
+shrinks when the code it excuses is fixed.
+"""
+from __future__ import annotations
+
+import ast
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Iterable
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation, addressed by repo-relative file + 1-based line."""
+    file: str
+    line: int
+    rule_id: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line}: {self.rule_id} {self.message}"
+
+
+class Module:
+    """One parsed source file: AST plus raw lines (for trailing comments,
+    which the AST does not keep)."""
+
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.source = path.read_text()
+        self.lines = self.source.splitlines()
+        self.tree = ast.parse(self.source, filename=str(path))
+
+    def line(self, lineno: int) -> str:
+        """Source text of 1-based ``lineno`` ('' when out of range)."""
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+
+class Project:
+    """A source tree rooted at ``root``; parses files on demand."""
+
+    def __init__(self, root):
+        self.root = Path(root).resolve()
+        self._modules: dict[str, Module | None] = {}
+
+    def rel(self, path: Path) -> str:
+        return path.resolve().relative_to(self.root).as_posix()
+
+    def module(self, rel: str) -> Module | None:
+        """Parsed module for a repo-relative path, or None if absent."""
+        if rel not in self._modules:
+            path = self.root / rel
+            self._modules[rel] = (Module(path, rel) if path.is_file()
+                                  else None)
+        return self._modules[rel]
+
+    def modules(self, *rel_dirs: str) -> list[Module]:
+        """All ``.py`` modules under the given repo-relative dirs, sorted
+        by path (deterministic pass order)."""
+        out: list[Module] = []
+        for rel_dir in rel_dirs:
+            base = self.root / rel_dir
+            if not base.is_dir():
+                continue
+            for path in sorted(base.rglob("*.py")):
+                mod = self.module(self.rel(path))
+                if mod is not None:
+                    out.append(mod)
+        return out
+
+    def read_text(self, rel: str) -> str:
+        path = self.root / rel
+        return path.read_text() if path.is_file() else ""
+
+    def glob_text(self, pattern: str) -> str:
+        """Concatenated text of every file matching a repo-relative glob."""
+        return "\n".join(p.read_text()
+                         for p in sorted(self.root.glob(pattern))
+                         if p.is_file())
+
+
+# -- registry ---------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Pass:
+    name: str
+    rule_ids: tuple
+    doc: str
+    fn: Callable
+
+
+PASSES: dict[str, Pass] = {}
+
+
+def register(name: str, rule_ids: Iterable[str], doc: str):
+    """Decorator: register a pass under ``name`` with its rule ids."""
+    def wrap(fn):
+        PASSES[name] = Pass(name, tuple(rule_ids), doc, fn)
+        return fn
+    return wrap
+
+
+def rule_owner(rule_id: str) -> str | None:
+    for p in PASSES.values():
+        if rule_id in p.rule_ids:
+            return p.name
+    return None
+
+
+def run_passes(project: Project, names: Iterable[str] | None = None
+               ) -> list[Finding]:
+    """Run the named passes (default: all) and return sorted findings."""
+    names = list(names) if names is not None else sorted(PASSES)
+    findings: list[Finding] = []
+    for name in names:
+        findings.extend(PASSES[name].fn(project))
+    return sorted(findings, key=lambda f: (f.file, f.line, f.rule_id,
+                                           f.message))
+
+
+# -- baseline ---------------------------------------------------------------
+
+def load_baseline(path) -> list[dict]:
+    """Baseline entries: {"rule", "file", "contains", "reason"}."""
+    entries = json.loads(Path(path).read_text())
+    for i, e in enumerate(entries):
+        missing = {"rule", "file", "contains", "reason"} - set(e)
+        if missing:
+            raise ValueError(f"baseline entry {i} missing keys "
+                             f"{sorted(missing)}: {e}")
+    return entries
+
+
+def apply_baseline(findings: list[Finding], entries: list[dict]
+                   ) -> tuple[list[Finding], list[Finding], list[dict]]:
+    """Split into (unsuppressed, suppressed, stale_entries)."""
+    used = [False] * len(entries)
+    kept, suppressed = [], []
+    for f in findings:
+        hit = None
+        for i, e in enumerate(entries):
+            if (e["rule"] == f.rule_id and e["file"] == f.file
+                    and e["contains"] in f.message):
+                hit = i
+                break
+        if hit is None:
+            kept.append(f)
+        else:
+            used[hit] = True
+            suppressed.append(f)
+    stale = [e for i, e in enumerate(entries) if not used[i]]
+    return kept, suppressed, stale
+
+
+# -- small AST helpers shared by passes -------------------------------------
+
+def parent_map(tree: ast.AST) -> dict[ast.AST, ast.AST]:
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def self_attr_path(node: ast.AST) -> str | None:
+    """'x' for ``self.x``, 'x.y' for ``self.x.y``, else None."""
+    dn = dotted_name(node)
+    if dn and dn.startswith("self."):
+        return dn[len("self."):]
+    return None

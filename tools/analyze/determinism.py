@@ -1,0 +1,206 @@
+"""Determinism pass: no unordered iteration, no wall-clock/global RNG.
+
+Scope: ``src/repro/serve`` and ``src/repro/core`` — the modules behind the
+greedy bit-identity contract (serving ≡ sync RolloutEngine) and the
+deterministic executor trace.  Two rules:
+
+* **DET001** — iteration over a ``set``/``frozenset`` value feeding an
+  order-sensitive consumer (``for`` loop, list/generator comprehension).
+  Python sets iterate in hash order, which varies with PYTHONHASHSEED and
+  insertion history, so any control flow derived from such an iteration is
+  run-to-run nondeterministic.  Wrapping in ``sorted()`` (or any
+  order-free reducer: ``len``/``sum``/``min``/``max``/``any``/``all``/
+  ``set``/``frozenset``) is the fix and is recognized.
+* **DET002** — calls into wall-clock or process-global RNG state:
+  ``time.time``/``time.time_ns`` (and other wall-clock ``time`` members),
+  ``datetime.*``, module-level ``random.*``, ``numpy.random.*``.  The
+  repo's clock is ``time.perf_counter[_ns]`` (monotonic, used only for
+  timing, never control flow) and its randomness is ``jax.random`` with
+  explicit keys — both allowed.
+
+Set-typed values are recognized structurally: set literals/comprehensions,
+``set(...)``/``frozenset(...)`` calls, set-operator expressions (``|``
+``&`` ``-`` ``^`` of a set), and local names/``self`` attributes assigned
+or annotated as sets within the enclosing scope.  This is intentionally
+lexical — no type inference across calls — so it can miss aliased sets,
+but it cannot false-positive on lists/dicts.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analyze.core import (Finding, Module, Project, dotted_name,
+                                parent_map, register)
+
+SCOPE_DIRS = ("src/repro/serve", "src/repro/core")
+
+# order-free consumers: iterating a set inside these is deterministic in
+# effect (result does not depend on iteration order)
+ORDER_FREE_CALLS = {"sorted", "set", "frozenset", "len", "sum", "min",
+                    "max", "any", "all"}
+
+TIME_ALLOWED = {"perf_counter", "perf_counter_ns", "monotonic",
+                "monotonic_ns", "sleep"}
+
+SET_OPS = (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)
+
+
+def _is_set_annotation(node: ast.AST | None) -> bool:
+    if node is None:
+        return False
+    text = ast.dump(node)
+    return ("'set'" in text or "'frozenset'" in text or "'Set'" in text
+            or "'FrozenSet'" in text)
+
+
+class _SetVars(ast.NodeVisitor):
+    """Collect names (and ``self.x`` paths) bound to set values in a scope.
+    One flat pass — no flow sensitivity, last annotation wins."""
+
+    def __init__(self):
+        self.names: set[str] = set()
+
+    def visit_Assign(self, node: ast.Assign):
+        if is_set_expr(node.value, self.names):
+            for tgt in node.targets:
+                dn = dotted_name(tgt)
+                if dn:
+                    self.names.add(dn)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign):
+        dn = dotted_name(node.target)
+        if dn and (_is_set_annotation(node.annotation)
+                   or (node.value is not None
+                       and is_set_expr(node.value, self.names))):
+            self.names.add(dn)
+        self.generic_visit(node)
+
+
+def is_set_expr(node: ast.AST, set_vars: set[str]) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("set", "frozenset"):
+        return True
+    if isinstance(node, ast.BinOp) and isinstance(node.op, SET_OPS):
+        return (is_set_expr(node.left, set_vars)
+                or is_set_expr(node.right, set_vars))
+    dn = dotted_name(node)
+    if dn is not None and dn in set_vars:
+        return True
+    # x.copy() / x.union(...) / x.difference(...) of a known set
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+            and node.func.attr in ("copy", "union", "intersection",
+                                   "difference", "symmetric_difference"):
+        return is_set_expr(node.func.value, set_vars)
+    return False
+
+
+def _order_free_context(node: ast.AST, parents: dict) -> bool:
+    """True when a comprehension's result is consumed order-free — its
+    immediate parent is a call to an order-insensitive reducer."""
+    parent = parents.get(node)
+    return (isinstance(parent, ast.Call)
+            and isinstance(parent.func, ast.Name)
+            and parent.func.id in ORDER_FREE_CALLS)
+
+
+def _collect_imports(tree: ast.Module) -> dict[str, str]:
+    """Local alias -> dotted origin ('np' -> 'numpy',
+    'time' (from-import) -> 'time.time')."""
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _resolve_call(func: ast.AST, aliases: dict[str, str]) -> str | None:
+    """Fully-qualified dotted name of a call target, alias-expanded."""
+    dn = dotted_name(func)
+    if dn is None:
+        return None
+    root, _, rest = dn.partition(".")
+    origin = aliases.get(root)
+    if origin is None:
+        return dn
+    return f"{origin}.{rest}" if rest else origin
+
+
+def _banned_call(qual: str) -> str | None:
+    if qual.startswith("time."):
+        member = qual.split(".", 1)[1]
+        if member not in TIME_ALLOWED:
+            return f"wall-clock `{qual}`"
+    if qual.startswith("datetime."):
+        return f"wall-clock `{qual}`"
+    if qual == "random" or qual.startswith("random."):
+        return f"process-global RNG `{qual}`"
+    if qual.startswith("numpy.random"):
+        return f"process-global RNG `{qual}`"
+    return None
+
+
+def _check_module(mod: Module) -> list[Finding]:
+    findings: list[Finding] = []
+    parents = parent_map(mod.tree)
+    aliases = _collect_imports(mod.tree)
+
+    # scope -> set-typed names (module scope + each function scope)
+    scopes = [mod.tree] + [n for n in ast.walk(mod.tree)
+                           if isinstance(n, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef))]
+    set_vars_by_scope: dict[ast.AST, set[str]] = {}
+    for scope in scopes:
+        sv = _SetVars()
+        sv.visit(scope)
+        set_vars_by_scope[scope] = sv.names
+
+    def enclosing_sets(node: ast.AST) -> set[str]:
+        names: set[str] = set()
+        cur = node
+        while cur is not None:
+            names |= set_vars_by_scope.get(cur, set())
+            cur = parents.get(cur)
+        return names
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.For):
+            if is_set_expr(node.iter, enclosing_sets(node)):
+                findings.append(Finding(
+                    mod.rel, node.lineno, "DET001",
+                    "for-loop over a set iterates in hash order — sort it "
+                    "(`for x in sorted(...)`) or use an ordered container"))
+        elif isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+            gen = node.generators[0]
+            if is_set_expr(gen.iter, enclosing_sets(node)) \
+                    and not _order_free_context(node, parents):
+                findings.append(Finding(
+                    mod.rel, node.lineno, "DET001",
+                    "comprehension over a set feeds an order-sensitive "
+                    "consumer — wrap the set in sorted() or restructure"))
+        elif isinstance(node, ast.Call):
+            qual = _resolve_call(node.func, aliases)
+            if qual:
+                why = _banned_call(qual)
+                if why:
+                    findings.append(Finding(
+                        mod.rel, node.lineno, "DET002",
+                        f"{why} in deterministic scope — use "
+                        f"time.perf_counter for timing, jax.random with an "
+                        f"explicit key for randomness"))
+    return findings
+
+
+@register("determinism", ("DET001", "DET002"),
+          "unordered iteration / wall-clock / global RNG in serve+core")
+def run(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in project.modules(*SCOPE_DIRS):
+        findings.extend(_check_module(mod))
+    return findings

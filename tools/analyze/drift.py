@@ -1,0 +1,102 @@
+"""Knob/counter drift pass: config fields and telemetry names stay
+documented.
+
+* **DRF001** — every ``RLConfig`` field must be REACHABLE: either wired
+  in ``src/repro/launch/train.py`` (a CLI flag or the ``RLConfig(...)``
+  construction) or mentioned by name in ``README.md``/``docs/*.md``.  A
+  field neither place is a knob nobody can discover — the drift this
+  repo actually accumulated before this pass existed (15 fields).
+* **DRF002** — every literal ``serve.*``/``dock.*`` name emitted through
+  the telemetry layer (``MetricsRegistry.inc/observe/set/set_max``,
+  ``Tracer.span/instant/counter``) must appear in
+  ``docs/observability.md``, the single event/metric catalog.  This
+  supersedes hand-maintained name lists: add a counter, and CI fails
+  until the catalog row exists.
+
+Known limitation (documented in docs/analysis.md): f-string event names
+(``stage.{node.name}``, ``reshard.to_{want}``) are not literal and are
+skipped; the catalog documents those families as ``stage.<node>`` /
+``reshard.to_*`` and ``tools/trace_report.py --expect`` covers them
+dynamically.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.analyze.core import Finding, Project, dotted_name, register
+
+EMIT_METHODS = {"inc", "observe", "set", "set_max", "span", "instant",
+                "counter"}
+NAME_PREFIXES = ("serve.", "dock.")
+
+
+def _rlconfig_fields(project: Project) -> list[tuple[str, int]]:
+    mod = project.module("src/repro/configs/base.py")
+    if mod is None:
+        return []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef) and node.name == "RLConfig":
+            return [(item.target.id, item.lineno) for item in node.body
+                    if isinstance(item, ast.AnnAssign)
+                    and isinstance(item.target, ast.Name)]
+    return []
+
+
+def _emitter_receiver(call: ast.Call) -> bool:
+    """True when the call receiver looks like the telemetry layer — a
+    tracer or metrics registry (or the conventional tr/m locals)."""
+    if not isinstance(call.func, ast.Attribute):
+        return False
+    recv = dotted_name(call.func.value)
+    if recv is None:
+        return False
+    last = recv.split(".")[-1]
+    return ("tracer" in last or "metrics" in last or last in ("tr", "m"))
+
+
+def _literal_names(arg: ast.AST) -> list[str]:
+    """String constants an emission's name argument can evaluate to
+    (handles the `a if cond else b` split-counter idiom)."""
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+        return [arg.value]
+    if isinstance(arg, ast.IfExp):
+        return _literal_names(arg.body) + _literal_names(arg.orelse)
+    return []
+
+
+@register("drift", ("DRF001", "DRF002"),
+          "RLConfig knobs reachable; emitted serve./dock. names cataloged")
+def run(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+
+    reach_text = (project.read_text("src/repro/launch/train.py")
+                  + project.read_text("README.md")
+                  + project.glob_text("docs/*.md"))
+    for field, lineno in _rlconfig_fields(project):
+        if not re.search(rf"\b{re.escape(field)}\b", reach_text):
+            findings.append(Finding(
+                "src/repro/configs/base.py", lineno, "DRF001",
+                f"RLConfig.{field} is not reachable from train.py nor "
+                f"mentioned in README.md/docs/*.md — wire a CLI flag or "
+                f"document the knob"))
+
+    catalog = project.read_text("docs/observability.md")
+    seen: set[str] = set()
+    for mod in project.modules("src/repro"):
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and node.args
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in EMIT_METHODS
+                    and _emitter_receiver(node)):
+                continue
+            for name in _literal_names(node.args[0]):
+                if not name.startswith(NAME_PREFIXES) or name in seen:
+                    continue
+                seen.add(name)
+                if name not in catalog:
+                    findings.append(Finding(
+                        mod.rel, node.lineno, "DRF002",
+                        f"emitted telemetry name `{name}` is missing from "
+                        f"the docs/observability.md catalog"))
+    return findings

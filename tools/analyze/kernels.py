@@ -1,0 +1,325 @@
+"""Pallas kernel-shape pass: grid/BlockSpec consistency, stated
+assumptions enforced, VMEM budget respected.
+
+Scope: every module under ``src/repro`` containing a ``pallas_call``
+(the kernels package plus the paged-cache gather kernel).  Three checks
+per call site, one annotation convention:
+
+* **KRN001** — BlockSpec/grid consistency.  Each ``BlockSpec`` index-map
+  lambda must take ``len(grid) + num_scalar_prefetch`` arguments, and
+  when its body is a tuple, return one coordinate per block-shape
+  dimension.  (Wrong arity fails loudly at trace time; this catches it
+  at review time, and in both jit-cached and cold paths.)
+* **KRN002** — a kernel wrapper whose docstring states a divisibility /
+  power-of-two / alignment assumption must enforce it in code: an
+  ``assert``/``raise``, a ``while x % b: b //= 2`` block-shrink loop, or
+  a call into a ``pad``-named helper.  Stated-but-unenforced assumptions
+  are exactly how interpret-mode-green kernels die on real shapes.
+* **KRN003 / KRN004** — the summed upper-bound VMEM footprint of one
+  program's blocks (in/out specs + scratch, f32 accounting) must fit
+  ``VMEM_BUDGET_BYTES`` (16 MiB/core, the TPU guide number).  Dimension
+  upper bounds resolve from literals, parameter defaults, ``min(...)``
+  shrink patterns, and the module's ``VMEM_BOUNDS = {dim: bound}``
+  declaration — a dimension none of those bound is itself a finding
+  (KRN004), so every kernel documents the deployment envelope its tiling
+  was sized for.
+
+All resolution is intraprocedural and conservative: bounds are upper
+bounds, and ``min(a, b)`` takes the smallest resolvable operand.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.analyze.core import Finding, Module, Project, dotted_name, \
+    register
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024      # per-core VMEM (TPU v4/v5e class)
+DTYPE_BYTES = 4                           # f32 accounting (upper bound)
+
+ASSUMPTION_RE = re.compile(
+    r"multiple of|divisible|divides|power of two|power-of-two|pow2|aligned|"
+    r"% == 0|must be even", re.IGNORECASE)
+
+
+# -- bound resolution -------------------------------------------------------
+
+class _Env:
+    """Upper bounds for names in one function: assignments, parameter
+    defaults, and the module-level VMEM_BOUNDS dict."""
+
+    def __init__(self, fn: ast.FunctionDef, module_bounds: dict[str, int]):
+        self.assigns: dict[str, ast.AST] = {}
+        self.defaults: dict[str, int] = {}
+        self.module_bounds = module_bounds
+        args = fn.args
+        pos = args.posonlyargs + args.args
+        for a, d in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+            if isinstance(d, ast.Constant) and isinstance(d.value, int):
+                self.defaults[a.arg] = d.value
+        for a, d in zip(args.kwonlyargs, args.kw_defaults):
+            if isinstance(d, ast.Constant) and isinstance(d.value, int):
+                self.defaults[a.arg] = d.value
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                self.assigns[node.targets[0].id] = node.value
+
+    def bound(self, node: ast.AST, stack: frozenset = frozenset()
+              ) -> int | None:
+        if isinstance(node, ast.Constant):
+            return node.value if isinstance(node.value, int) else None
+        if isinstance(node, ast.Name):
+            name = node.id
+            if name not in stack and name in self.assigns:
+                b = self.bound(self.assigns[name], stack | {name})
+                if b is not None:
+                    return b
+            if name in self.defaults:
+                return self.defaults[name]
+            return self.module_bounds.get(name)
+        if isinstance(node, ast.BinOp):
+            left = self.bound(node.left, stack)
+            right = self.bound(node.right, stack)
+            if left is None or right is None:
+                return None
+            if isinstance(node.op, ast.Mult):
+                return left * right
+            if isinstance(node.op, ast.FloorDiv) and right:
+                return left // right
+            if isinstance(node.op, ast.Add):
+                return left + right
+            if isinstance(node.op, ast.Sub):
+                return left            # upper bound: ignore the subtrahend
+            return None
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+            operands = [self.bound(a, stack) for a in node.args]
+            known = [b for b in operands if b is not None]
+            if node.func.id == "min" and known:
+                return min(known)      # sound: true min <= any operand
+            if node.func.id == "max" and len(known) == len(operands) \
+                    and known:
+                return max(known)
+        return None
+
+
+def _module_bounds(tree: ast.Module) -> dict[str, int]:
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == "VMEM_BOUNDS" \
+                and isinstance(node.value, ast.Dict):
+            out = {}
+            for k, v in zip(node.value.keys, node.value.values):
+                if isinstance(k, ast.Constant) and isinstance(v, ast.Constant):
+                    out[k.value] = v.value
+            return out
+    return {}
+
+
+# -- call-site model --------------------------------------------------------
+
+def _kw(call: ast.Call, name: str) -> ast.AST | None:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _resolve_name(node: ast.AST, env: _Env) -> ast.AST:
+    """Follow one level of local Name -> assignment (spec aliases)."""
+    if isinstance(node, ast.Name) and node.id in env.assigns:
+        return env.assigns[node.id]
+    return node
+
+
+def _is_call_to(node: ast.AST, name: str) -> bool:
+    return (isinstance(node, ast.Call)
+            and (dotted_name(node.func) or "").split(".")[-1] == name)
+
+
+def _block_specs(seq: ast.AST, env: _Env) -> list[ast.Call]:
+    seq = _resolve_name(seq, env)
+    items = seq.elts if isinstance(seq, (ast.List, ast.Tuple)) else [seq]
+    out = []
+    for item in items:
+        item = _resolve_name(item, env)
+        if _is_call_to(item, "BlockSpec"):
+            out.append(item)
+    return out
+
+
+def _grid_info(call: ast.Call, env: _Env):
+    """(ngrid, nprefetch, in_specs, out_specs, scratch) or None."""
+    grid = _kw(call, "grid")
+    if grid is not None:
+        grid = _resolve_name(grid, env)
+        if not isinstance(grid, ast.Tuple):
+            return None
+        return (len(grid.elts), 0, _kw(call, "in_specs"),
+                _kw(call, "out_specs"), None)
+    spec = _kw(call, "grid_spec")
+    if spec is None:
+        return None
+    spec = _resolve_name(spec, env)
+    if not _is_call_to(spec, "PrefetchScalarGridSpec"):
+        return None
+    g = _resolve_name(_kw(spec, "grid") or ast.Constant(None), env)
+    if not isinstance(g, ast.Tuple):
+        return None
+    npre = _kw(spec, "num_scalar_prefetch")
+    npre = npre.value if isinstance(npre, ast.Constant) else 0
+    return (len(g.elts), npre, _kw(spec, "in_specs"),
+            _kw(spec, "out_specs"), _kw(spec, "scratch_shapes"))
+
+
+def _check_spec(mod: Module, spec: ast.Call, ngrid: int, npre: int,
+                env: _Env) -> tuple[list[Finding], int | None]:
+    """KRN001 on one BlockSpec; returns (findings, byte upper bound)."""
+    findings: list[Finding] = []
+    shape = spec.args[0] if spec.args else _kw(spec, "block_shape")
+    index_map = (spec.args[1] if len(spec.args) > 1
+                 else _kw(spec, "index_map"))
+    dims = shape.elts if isinstance(shape, ast.Tuple) else None
+
+    if isinstance(index_map, ast.Lambda):
+        want = ngrid + npre
+        got = len(index_map.args.args)
+        if got != want:
+            findings.append(Finding(
+                mod.rel, index_map.lineno, "KRN001",
+                f"BlockSpec index_map takes {got} args but grid rank "
+                f"{ngrid} + {npre} scalar-prefetch operands requires "
+                f"{want}"))
+        if dims is not None and isinstance(index_map.body, ast.Tuple) \
+                and len(index_map.body.elts) != len(dims):
+            findings.append(Finding(
+                mod.rel, index_map.lineno, "KRN001",
+                f"BlockSpec index_map returns "
+                f"{len(index_map.body.elts)} coordinates for a "
+                f"{len(dims)}-dimensional block shape"))
+
+    if dims is None:
+        return findings, None
+    total = DTYPE_BYTES
+    for dim in dims:
+        b = env.bound(dim)
+        if b is None:
+            findings.append(Finding(
+                mod.rel, dim.lineno, "KRN004",
+                f"cannot bound block dimension "
+                f"`{ast.unparse(dim)}` — add it to this module's "
+                f"VMEM_BOUNDS so the VMEM budget check covers this "
+                f"kernel"))
+            return findings, None
+        total *= b
+    return findings, total
+
+
+def _check_call(mod: Module, fn: ast.FunctionDef, call: ast.Call,
+                env: _Env) -> list[Finding]:
+    findings: list[Finding] = []
+    info = _grid_info(call, env)
+    if info is None:
+        findings.append(Finding(
+            mod.rel, call.lineno, "KRN004",
+            "pallas_call grid is not statically resolvable (literal tuple "
+            "or local PrefetchScalarGridSpec) — the shape checks cannot "
+            "run"))
+        return findings
+    ngrid, npre, in_specs, out_specs, scratch = info
+    total = 0
+    bounded = True
+    for seq in (in_specs, out_specs):
+        if seq is None:
+            continue
+        for spec in _block_specs(seq, env):
+            fs, nbytes = _check_spec(mod, spec, ngrid, npre, env)
+            findings.extend(fs)
+            if nbytes is None:
+                bounded = False
+            else:
+                total += nbytes
+    if scratch is not None:
+        scratch = _resolve_name(scratch, env)
+        items = scratch.elts if isinstance(scratch, (ast.List, ast.Tuple)) \
+            else []
+        for item in items:
+            if _is_call_to(item, "VMEM") and item.args \
+                    and isinstance(item.args[0], ast.Tuple):
+                nbytes = DTYPE_BYTES
+                for dim in item.args[0].elts:
+                    b = env.bound(dim)
+                    if b is None:
+                        bounded = False
+                        findings.append(Finding(
+                            mod.rel, dim.lineno, "KRN004",
+                            f"cannot bound scratch dimension "
+                            f"`{ast.unparse(dim)}` — add it to "
+                            f"VMEM_BOUNDS"))
+                        break
+                    nbytes *= b
+                else:
+                    total += nbytes
+    if bounded and total > VMEM_BUDGET_BYTES:
+        findings.append(Finding(
+            mod.rel, call.lineno, "KRN003",
+            f"per-program VMEM upper bound "
+            f"{total / 2**20:.1f} MiB exceeds the "
+            f"{VMEM_BUDGET_BYTES / 2**20:.0f} MiB budget — shrink the "
+            f"default block sizes or tighten VMEM_BOUNDS"))
+    return findings
+
+
+def _has_enforcement(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assert, ast.Raise)):
+            return True
+        if isinstance(node, ast.While) and any(
+                isinstance(s, ast.BinOp) and isinstance(s.op, ast.Mod)
+                for s in ast.walk(node.test)):
+            return True                  # `while x % b: b //= 2` shrink
+        if isinstance(node, ast.Call):
+            name = (dotted_name(node.func) or "").split(".")[-1]
+            if "pad" in name:
+                return True
+    return False
+
+
+def _check_fn(mod: Module, fn: ast.FunctionDef, seen: set
+              ) -> list[Finding]:
+    calls = [n for n in ast.walk(fn)
+             if isinstance(n, ast.Call)
+             and (dotted_name(n.func) or "").split(".")[-1] == "pallas_call"
+             and id(n) not in seen]
+    if not calls:
+        return []
+    seen.update(id(c) for c in calls)
+    findings: list[Finding] = []
+    doc = ast.get_docstring(fn) or ""
+    if ASSUMPTION_RE.search(doc) and not _has_enforcement(fn):
+        findings.append(Finding(
+            mod.rel, fn.lineno, "KRN002",
+            f"`{fn.name}` docstring states a divisibility/alignment "
+            f"assumption but the body has no assert, raise, block-shrink "
+            f"loop, or pad call enforcing it"))
+    env = _Env(fn, _module_bounds(mod.tree))
+    for call in calls:
+        findings.extend(_check_call(mod, fn, call, env))
+    return findings
+
+
+@register("kernel-shapes", ("KRN001", "KRN002", "KRN003", "KRN004"),
+          "pallas grid/BlockSpec consistency, enforced assumptions, "
+          "VMEM budget")
+def run(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in project.modules("src/repro"):
+        if "pallas_call" not in mod.source:
+            continue
+        seen: set = set()             # ast.walk is outer-first: the wrapper
+        for node in ast.walk(mod.tree):  # claims its calls before any
+            if isinstance(node, ast.FunctionDef):   # nested def re-walks them
+                findings.extend(_check_fn(mod, node, seen))
+    return findings

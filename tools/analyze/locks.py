@@ -1,0 +1,168 @@
+"""Lock-discipline pass: `# guarded-by:` annotations, lexically verified.
+
+The convention (documented in docs/analysis.md):
+
+* An attribute assignment carrying a trailing ``# guarded-by: <lock>``
+  comment declares that EVERY access of ``self.<attr>`` in the class must
+  be lexically inside ``with self.<lock>:`` (dotted locks like
+  ``swap._cond`` are supported).  Declarations usually live in
+  ``__init__`` next to the lock itself.
+* A method whose ``def`` line (or the line above it) carries
+  ``# thread-confined: <why>`` is exempt — it runs only on a single
+  thread by construction (the comment says which and why).
+* A method carrying ``# requires-lock: <lock>`` asserts its CALLERS hold
+  the lock; its body is checked as if the lock were held throughout.
+* ``__init__`` is implicitly thread-confined (no concurrent aliases can
+  exist while the object is being constructed).
+
+Rules:
+
+* **LOCK001** — access to a guarded attribute outside its lock (and not
+  in a thread-confined / requires-lock method).
+* **LOCK002** — a declared lock that no ``with self.<lock>:`` in the
+  class ever acquires (dead or misspelled annotation).
+
+The check is lexical, not interprocedural: a guarded attribute reached
+through a local alias (``t = self.x`` hoisted out of the lock) or from
+another object's method is invisible to it.  That is the right trade for
+an annotation the reader can verify by eye — the annotation marks the
+discipline, the pass keeps it honest.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.analyze.core import Finding, Module, Project, register, \
+    self_attr_path
+
+GUARD_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][\w.]*)")
+CONFINED_RE = re.compile(r"#\s*thread-confined\b")
+REQUIRES_RE = re.compile(r"#\s*requires-lock:\s*([A-Za-z_][\w.]*)")
+
+
+def _def_comment(mod: Module, fn: ast.FunctionDef, pattern: re.Pattern):
+    """Match ``pattern`` on the ``def`` line or the line directly above
+    (decorators push the def down; lineno is the ``def`` itself)."""
+    for lineno in (fn.lineno, fn.lineno - 1):
+        m = pattern.search(mod.line(lineno))
+        if m:
+            return m
+    return None
+
+
+def _guarded_attrs(mod: Module, cls: ast.ClassDef) -> dict[str, tuple]:
+    """attr name -> (lock path, declaration line)."""
+    out: dict[str, tuple] = {}
+    for node in ast.walk(cls):
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            m = GUARD_RE.search(mod.line(node.lineno))
+            if not m:
+                continue
+            for tgt in targets:
+                path = self_attr_path(tgt)
+                if path and "." not in path:
+                    out[path] = (m.group(1), node.lineno)
+    return out
+
+
+def _acquired_locks(cls: ast.ClassDef) -> set[str]:
+    """Every ``self.<dotted>`` appearing as a with-item in the class."""
+    locks: set[str] = set()
+    for node in ast.walk(cls):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                path = self_attr_path(item.context_expr)
+                if path:
+                    locks.add(path)
+    return locks
+
+
+class _MethodChecker(ast.NodeVisitor):
+    """Walk one method body tracking the lexically-held lock set."""
+
+    def __init__(self, mod: Module, guarded: dict[str, tuple],
+                 held: set[str]):
+        self.mod = mod
+        self.guarded = guarded
+        self.held = set(held)
+        self.findings: list[Finding] = []
+
+    def visit_With(self, node: ast.With):
+        added = []
+        for item in node.items:
+            path = self_attr_path(item.context_expr)
+            if path:
+                added.append(path)
+            self.visit(item.context_expr)
+            if item.optional_vars is not None:
+                self.visit(item.optional_vars)
+        self.held.update(added)
+        for stmt in node.body:
+            self.visit(stmt)
+        self.held.difference_update(added)
+
+    visit_AsyncWith = visit_With
+
+    def visit_Attribute(self, node: ast.Attribute):
+        path = self_attr_path(node)
+        # `self.swap._cond` reports attr 'swap' at the self boundary — the
+        # guarded name is always the FIRST component
+        if path is not None:
+            first = path.split(".")[0]
+            info = self.guarded.get(first)
+            if info is not None and info[0] not in self.held:
+                self.findings.append(Finding(
+                    self.mod.rel, node.lineno, "LOCK001",
+                    f"`self.{first}` is declared `# guarded-by: {info[0]}` "
+                    f"but is accessed outside `with self.{info[0]}:` "
+                    f"(annotate the method `# thread-confined:`/"
+                    f"`# requires-lock:` if this is by design)"))
+            return   # a pure self-chain: prefixes are the same access
+        self.generic_visit(node)
+
+
+def _check_class(mod: Module, cls: ast.ClassDef) -> list[Finding]:
+    guarded = _guarded_attrs(mod, cls)
+    if not guarded:
+        return []
+    findings: list[Finding] = []
+
+    acquired = _acquired_locks(cls)
+    for attr, (lock, lineno) in sorted(guarded.items()):
+        if lock not in acquired:
+            findings.append(Finding(
+                mod.rel, lineno, "LOCK002",
+                f"`self.{attr}` declares `# guarded-by: {lock}` but no "
+                f"`with self.{lock}:` exists in class {cls.name} — dead "
+                f"or misspelled lock annotation"))
+
+    for item in cls.body:
+        if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if item.name == "__init__":
+            continue                      # implicitly thread-confined
+        if _def_comment(mod, item, CONFINED_RE):
+            continue
+        held: set[str] = set()
+        m = _def_comment(mod, item, REQUIRES_RE)
+        if m:
+            held.add(m.group(1))
+        checker = _MethodChecker(mod, guarded, held)
+        for stmt in item.body:
+            checker.visit(stmt)
+        findings.extend(checker.findings)
+    return findings
+
+
+@register("locks", ("LOCK001", "LOCK002"),
+          "guarded-by annotations verified lexically against with-blocks")
+def run(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in project.modules("src/repro"):
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                findings.extend(_check_class(mod, node))
+    return findings

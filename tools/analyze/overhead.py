@@ -1,0 +1,170 @@
+"""Tracer-overhead pass: disabled tracing must allocate nothing.
+
+The repo's contract (docs/observability.md "Overhead contract"): a
+disabled tracer costs one predicate per instrumented site — ``span()``
+returns a singleton, ``instant``/``counter`` early-return, and nothing is
+appended or allocated.  The call itself honors that, but ARGUMENT
+construction happens before the call: ``tr.instant("x", args={...})``
+builds the dict even when disabled.  In the hot-loop modules this pass
+therefore forbids any allocating argument expression (dict/list/tuple/
+f-string/comprehension/nested call/arithmetic) at a tracer emission site
+unless the site is lexically under an ``enabled`` guard.
+
+Recognized guards:
+
+* ``if <...>.enabled:`` (including ``tr is not None and tr.enabled``) —
+  the body is guarded; an ``else:`` branch is not.
+* ``if not <...>.enabled: return ...`` — every statement after it in the
+  same block is guarded (the engine.step idiom).
+* ``X if <...>.enabled else NULL_SPAN`` — the true branch is guarded.
+
+**TRC001** — allocating tracer-call arguments outside an enabled guard.
+
+Emission sites are calls to ``.span``/``.instant``/``.counter`` on a
+receiver that names a tracer (``self.tracer``, ``tr``, ``tracer``).
+Constant-only calls (``tr.instant("serve.x")``) pass unguarded — they
+allocate nothing, matching the early-return contract.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analyze.core import Finding, Module, Project, dotted_name, \
+    register
+
+HOT_MODULES = (
+    "src/repro/serve/engine.py",
+    "src/repro/serve/scheduler.py",
+    "src/repro/serve/host_tier.py",
+    "src/repro/core/graph.py",
+    "src/repro/core/transfer_dock.py",
+)
+
+EMIT_METHODS = {"span", "instant", "counter"}
+
+ALLOCATING = (ast.Dict, ast.List, ast.Set, ast.Tuple, ast.ListComp,
+              ast.SetComp, ast.DictComp, ast.GeneratorExp, ast.JoinedStr,
+              ast.Call, ast.BinOp, ast.NamedExpr)
+
+
+def _is_tracer_call(node: ast.Call) -> bool:
+    if not (isinstance(node.func, ast.Attribute)
+            and node.func.attr in EMIT_METHODS):
+        return False
+    recv = dotted_name(node.func.value)
+    if recv is None:
+        return False
+    last = recv.split(".")[-1]
+    return "tracer" in last or last == "tr"
+
+
+def _allocating_arg(node: ast.Call) -> ast.AST | None:
+    for arg in list(node.args) + [kw.value for kw in node.keywords]:
+        for sub in ast.walk(arg):
+            if isinstance(sub, ALLOCATING):
+                return sub
+    return None
+
+
+def _mentions_enabled(node: ast.AST) -> bool:
+    return any(isinstance(sub, ast.Attribute) and sub.attr == "enabled"
+               for sub in ast.walk(node))
+
+
+def _test_polarity(test: ast.AST) -> str | None:
+    """'pos' for `...enabled...`, 'neg' for `not ...enabled...`."""
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return "neg" if _mentions_enabled(test.operand) else None
+    return "pos" if _mentions_enabled(test) else None
+
+
+def _terminates(body: list[ast.stmt]) -> bool:
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+class _Checker:
+    def __init__(self, mod: Module):
+        self.mod = mod
+        self.findings: list[Finding] = []
+
+    # -- expressions --------------------------------------------------------
+    def expr(self, node: ast.AST, guarded: bool) -> None:
+        if isinstance(node, ast.IfExp):
+            pol = _test_polarity(node.test)
+            self.expr(node.test, guarded)
+            self.expr(node.body, guarded or pol == "pos")
+            self.expr(node.orelse, guarded or pol == "neg")
+            return
+        if isinstance(node, ast.Call) and _is_tracer_call(node):
+            if not guarded:
+                alloc = _allocating_arg(node)
+                if alloc is not None:
+                    self.findings.append(Finding(
+                        self.mod.rel, node.lineno, "TRC001",
+                        f"tracer .{node.func.attr}() argument builds a "
+                        f"{type(alloc).__name__} outside an `.enabled` "
+                        f"guard — a disabled tracer must allocate nothing "
+                        f"(hoist under `if tr.enabled:` or use the "
+                        f"early-return / NULL_SPAN idiom)"))
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            # a nested callable runs later, possibly outside the guard
+            inner = node.body if isinstance(node.body, list) else [node.body]
+            if isinstance(node, ast.Lambda):
+                self.expr(node.body, False)
+            else:
+                self.stmts(inner, False)
+            return
+        for child in ast.iter_child_nodes(node):
+            self.expr(child, guarded)
+
+    # -- statements ---------------------------------------------------------
+    def stmts(self, body: list[ast.stmt], guarded: bool) -> None:
+        after = guarded
+        for stmt in body:
+            if isinstance(stmt, ast.If):
+                pol = _test_polarity(stmt.test)
+                self.expr(stmt.test, after)
+                self.stmts(stmt.body, after or pol == "pos")
+                self.stmts(stmt.orelse, after or pol == "neg")
+                if pol == "neg" and _terminates(stmt.body):
+                    after = True          # `if not enabled: return` idiom
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.stmts(stmt.body, False)
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                self.expr(stmt.iter, after)
+                self.stmts(stmt.body, after)
+                self.stmts(stmt.orelse, after)
+            elif isinstance(stmt, ast.While):
+                self.expr(stmt.test, after)
+                self.stmts(stmt.body, after)
+                self.stmts(stmt.orelse, after)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    self.expr(item.context_expr, after)
+                self.stmts(stmt.body, after)
+            elif isinstance(stmt, ast.Try):
+                self.stmts(stmt.body, after)
+                for handler in stmt.handlers:
+                    self.stmts(handler.body, after)
+                self.stmts(stmt.orelse, after)
+                self.stmts(stmt.finalbody, after)
+            elif isinstance(stmt, ast.ClassDef):
+                self.stmts(stmt.body, False)
+            else:
+                self.expr(stmt, after)
+
+
+@register("tracer-overhead", ("TRC001",),
+          "no tracer-argument allocation outside enabled guards (hot loop)")
+def run(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for rel in HOT_MODULES:
+        mod = project.module(rel)
+        if mod is None:
+            continue
+        checker = _Checker(mod)
+        checker.stmts(mod.tree.body, False)
+        findings.extend(checker.findings)
+    return findings

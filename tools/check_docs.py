@@ -45,6 +45,7 @@ CI_SCRIPTS = [
 REQUIRED_DOCS = [
     "docs/ARCHITECTURE.md",
     "docs/observability.md",
+    "docs/analysis.md",
 ]
 
 
