@@ -1,1 +1,3 @@
-from repro.checkpoint.io import load_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.io import (is_train_state, load_pytree,  # noqa: F401
+                                 load_train_state, save_pytree,
+                                 save_train_state)

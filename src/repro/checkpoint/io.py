@@ -48,3 +48,160 @@ def load_pytree(path: str, like, shardings=None):
             arr = jax.device_put(arr, sh)
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(flat_like[1], leaves)
+
+
+# ---------------------------------------------------------------------------
+# Iteration-level train state — checkpoint/resume for the resilience layer.
+#
+# A train-state checkpoint is taken BETWEEN iterations and captures every
+# input the next iteration reads: policy/reference/optimizer pytrees, the
+# trainer and serving-engine PRNG keys, the dataset RNG, the transfer dock's
+# rows + readiness metadata (live state for partial rollout, where samples
+# span iterations), and the partial-rollout carryover (pending sequences,
+# per-sample metas, the persistent index counter).  ``--resume`` from one
+# replays the remaining iterations bit-identically (docs/resilience.md).
+# ---------------------------------------------------------------------------
+
+TRAIN_STATE_KIND = "train_state"
+
+
+def _unflatten_like(data, prefix: str, like):
+    """Rebuild ``like``'s structure from npz entries ``prefix/<path>``."""
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pathk, leaf in flat_like[0]:
+        key = prefix + "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                                for k in pathk)
+        leaves.append(jnp.asarray(data[key], dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat_like[1], leaves)
+
+
+def is_train_state(path: str) -> bool:
+    """True when ``path`` holds a full train-state checkpoint (vs the legacy
+    params-only ``save_pytree`` format) — lets ``--resume`` accept both."""
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".json"
+    if not os.path.exists(meta_path):
+        return False
+    with open(meta_path) as f:
+        return json.load(f).get("kind") == TRAIN_STATE_KIND
+
+
+def save_train_state(path: str, trainer, *, iteration: int) -> None:
+    """Snapshot ``trainer`` after ``iteration`` completed iterations."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {}
+    for prefix, tree in (("params/", trainer.params),
+                         ("ref/", trainer.ref_params),
+                         ("opt/", trainer.opt_state)):
+        for k, v in _flatten_with_paths(tree).items():
+            arrays[prefix + k] = v
+    arrays["key"] = np.asarray(jax.device_get(trainer.key))
+
+    meta = {
+        "kind": TRAIN_STATE_KIND,
+        "iteration": int(iteration),
+        "iters_run": int(trainer._iters_run),
+        "dataset_rng": trainer.dataset.rng.bit_generator.state,
+        "metas": {str(i): m for i, m in
+                  getattr(trainer, "_metas", {}).items()},
+        "plen": int(getattr(trainer, "_plen", 0)),
+    }
+
+    # serving-engine cursor state (sampling key + request-id counter) — the
+    # sync rollout engine is stateless between iterations
+    eng = trainer.actor.engine
+    if trainer.actor.engine_kind == "serving":
+        arrays["serve_key"] = np.asarray(jax.device_get(eng._key))
+        meta["serve_next_rid"] = int(eng._next_rid)
+
+    # transfer dock — rows plus readiness/consumed metadata.  For trainers
+    # that clear the dock each iteration this is empty at a boundary; for
+    # partial rollout it is live cross-iteration state.
+    dock = trainer.dock
+    dock_fields = []
+    # canonical (field, idx) order: warehouse insertion order follows stage
+    # completion order, which is schedule-dependent under fused dispatch —
+    # checkpoint content must depend only on state, not schedule history
+    for wh in dock.warehouses:
+        for fld in sorted(wh.store):
+            rows = wh.store[fld]
+            for idx in sorted(rows):
+                arrays[f"dock/{fld}/{int(idx)}"] = np.asarray(rows[idx])
+                dock_fields.append([fld, int(idx)])
+    meta["dock"] = {
+        "rows": dock_fields,
+        "ready": {s: {str(i): sorted(f) for i, f in sorted(ctl.ready.items())}
+                  for s, ctl in dock.controllers.items()},
+        "consumed": {s: sorted(int(i) for i in ctl.consumed)
+                     for s, ctl in dock.controllers.items()},
+        "proto": {fld: [list(shape), np.dtype(dt).str]
+                  for fld, (shape, dt) in dock._proto.items()},
+    }
+
+    # partial-rollout carryover (absent on plain GRPO/PPO trainers)
+    partials = getattr(trainer, "partials", None)
+    if partials is not None:
+        meta["partials"] = {str(i): [int(t) for t in st.generated]
+                            for i, st in partials.items()}
+        meta["next_idx"] = int(trainer._next_idx)
+        for i, st in partials.items():
+            arrays[f"partials/{int(i)}/prompt"] = np.asarray(st.prompt)
+
+    np.savez(path, **arrays)
+    with open((path[:-4] if path.endswith(".npz") else path) + ".json",
+              "w") as f:
+        json.dump(meta, f)
+
+
+def load_train_state(path: str, trainer) -> int:
+    """Restore ``trainer`` in place from a ``save_train_state`` snapshot;
+    returns the number of iterations already completed (resume point)."""
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    data = np.load(npz_path)
+    with open((path[:-4] if path.endswith(".npz") else path) + ".json") as f:
+        meta = json.load(f)
+    if meta.get("kind") != TRAIN_STATE_KIND:
+        raise ValueError(f"{path} is not a train-state checkpoint "
+                         f"(kind={meta.get('kind')!r}); use load_pytree")
+
+    trainer.params = _unflatten_like(data, "params/", trainer.params)
+    trainer.ref_params = _unflatten_like(data, "ref/", trainer.ref_params)
+    trainer.opt_state = _unflatten_like(data, "opt/", trainer.opt_state)
+    # the reference worker holds the ref pytree by reference — re-point it
+    trainer.ref.params = trainer.ref_params
+    trainer.key = jnp.asarray(data["key"], dtype=trainer.key.dtype)
+    trainer._iters_run = int(meta["iters_run"])
+    trainer.dataset.rng.bit_generator.state = meta["dataset_rng"]
+    trainer._metas = {int(i): m for i, m in meta.get("metas", {}).items()}
+    if meta.get("plen"):
+        trainer._plen = int(meta["plen"])
+
+    eng = trainer.actor.engine
+    if trainer.actor.engine_kind == "serving" and "serve_key" in data:
+        eng._key = jnp.asarray(data["serve_key"], dtype=eng._key.dtype)
+        eng._next_rid = int(meta.get("serve_next_rid", 0))
+
+    dock = trainer.dock
+    dock.clear()
+    dmeta = meta.get("dock", {})
+    for fld, (shape, dt) in dmeta.get("proto", {}).items():
+        dock._proto[fld] = (tuple(shape), np.dtype(dt))
+    for fld, idx in dmeta.get("rows", []):
+        dock._wh(int(idx)).put(fld, int(idx), data[f"dock/{fld}/{int(idx)}"])
+    for state, ready in dmeta.get("ready", {}).items():
+        ctl = dock.controllers[state]
+        for idx, fields in ready.items():
+            ctl.ready[int(idx)] = set(fields)
+    for state, consumed in dmeta.get("consumed", {}).items():
+        dock.controllers[state].consumed = set(consumed)
+
+    if "partials" in meta and hasattr(trainer, "partials"):
+        from repro.core.partial import PartialState
+        trainer.partials = {
+            int(i): PartialState(
+                prompt=np.asarray(data[f"partials/{int(i)}/prompt"]),
+                generated=list(gen))
+            for i, gen in meta["partials"].items()}
+        trainer._next_idx = int(meta["next_idx"])
+
+    return int(meta["iteration"])

@@ -75,7 +75,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
 from repro.core.resharding import ReshardLedger
-from repro.obs import get_tracer
+from repro.obs import MetricsRegistry, get_tracer
+from repro.resilience import RetryPolicy, TransientError
 
 LAYOUTS = ("generation", "update")
 TIMINGS = ("gen", "infer", "update")
@@ -102,6 +103,8 @@ class StageNode:
     stream: bool = False              # may run on partial sample subsets
     gate: Optional[Callable] = None   # gate(ctx, idxs) -> dispatchable idxs
     timing: str = "infer"             # stats bucket: gen | infer | update
+    max_retries: Optional[int] = None  # transient-failure retry budget for
+    #                                    this node (None = executor default)
 
     def __post_init__(self):
         if self.layout is not None and self.layout not in LAYOUTS:
@@ -229,6 +232,9 @@ class GraphRun:
     counts: dict = field(default_factory=dict)       # node -> samples consumed
     rounds: int = 0
     reshard: ReshardLedger = field(default_factory=ReshardLedger)
+    retries: dict = field(default_factory=dict)      # node -> retry count
+    quarantined: dict = field(default_factory=dict)  # node -> dropped idxs
+    quarantined_idxs: set = field(default_factory=set)  # union over nodes
 
 
 class GraphExecutor:
@@ -238,7 +244,8 @@ class GraphExecutor:
     partial rollout are three declarations over the same engine.
     """
 
-    def __init__(self, dock, rl, tracer=None):
+    def __init__(self, dock, rl, tracer=None, faults=None, retry=None,
+                 metrics=None):
         self.dock = dock  # guarded-by: lock
         self.rl = rl
         self.lock = threading.RLock()
@@ -246,11 +253,24 @@ class GraphExecutor:
         # node id, sample idxs and fused-round membership — the rich form of
         # the (node, idxs) tuples GraphRun.trace keeps for bit-identity tests
         self.tracer = tracer if tracer is not None else get_tracer()
+        self.faults = faults              # FaultPlan | None (chaos hook)
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
 
     # -- thread-safe dock access -------------------------------------------
     def put(self, node: StageNode, fld: str, idxs, rows) -> None:
-        with self.lock:
-            self.dock.put(fld, idxs, rows, src_node=node.node)
+        # dock.put injects its fault at entry, before any row lands, so a
+        # retried put is exactly idempotent (same rows land once)
+        for attempt in range(self.retry.max_retries + 1):
+            try:
+                with self.lock:
+                    self.dock.put(fld, idxs, rows, src_node=node.node)
+                return
+            except TransientError as err:
+                if attempt >= self.retry.max_retries:
+                    raise
+                self._note_retry(node, attempt, err)
+                time.sleep(self.retry.backoff(attempt))
 
     def _available(self, node: StageNode, ctx) -> list:
         with self.lock:
@@ -326,18 +346,78 @@ class GraphExecutor:
             self._run_stage(node, idxs, ctx)
 
     def _run_stage(self, node: StageNode, idxs, ctx) -> None:
-        ins = self._fetch(node, idxs)
-        io = StageIO(node, idxs, ins, self)
-        out = node.fn(ctx, io)
-        if out:
-            for fld, rows in out.items():
-                self.put(node, fld, io.idxs, rows)
+        budget = (node.max_retries if node.max_retries is not None
+                  else self.retry.max_retries)
+        for attempt in range(budget + 1):
+            try:
+                # fault site at stage ENTRY — a retried attempt re-runs the
+                # whole stage from the fetch, so retry is idempotent and the
+                # outputs of a recovered run are bit-identical to fault-free
+                if self.faults is not None:
+                    self.faults.check("stage." + node.name)
+                io = self._attempt_stage(node, idxs, ctx)
+                break
+            except TransientError as err:
+                if attempt >= budget:
+                    self._quarantine(node, idxs, err)
+                    return
+                self._note_retry(node, attempt, err)
+                time.sleep(self.retry.backoff(attempt))
         with self.lock:
             if io.consumed:
                 self.dock.mark_consumed(node.name, io.consumed)
             run = self._run
             run.counts[node.name] = (run.counts.get(node.name, 0)
                                      + len(io.consumed))
+
+    def _attempt_stage(self, node: StageNode, idxs, ctx) -> StageIO:
+        ins = self._fetch(node, idxs)
+        io = StageIO(node, idxs, ins, self)
+        out = node.fn(ctx, io)
+        if out:
+            for fld, rows in out.items():
+                self.put(node, fld, io.idxs, rows)
+        return io
+
+    def _note_retry(self, node: StageNode, attempt: int, err) -> None:
+        self.metrics.inc("graph.retry")
+        with self.lock:
+            run = getattr(self, "_run", None)
+            if run is not None:
+                run.retries[node.name] = run.retries.get(node.name, 0) + 1
+        if self.tracer.enabled:
+            self.tracer.instant("graph.retry", cat="graph",
+                                args={"node": node.name, "attempt": attempt,
+                                      "error": str(err)})
+
+    def _quarantine(self, node: StageNode, idxs, err) -> None:
+        """Retry budget exhausted: drop this dispatch's samples instead of
+        poisoning the batch.  The idxs are marked consumed for the failing
+        node (so the run quiesces) and recorded on the GraphRun; downstream
+        barriers shrink by the quarantined count (``_effective``), so
+        surviving samples still flow end to end."""
+        dropped = [int(i) for i in idxs]
+        with self.lock:
+            self.dock.mark_consumed(node.name, idxs)
+            run = self._run
+            run.quarantined.setdefault(node.name, []).extend(dropped)
+            run.quarantined_idxs.update(dropped)
+            # NOT added to run.counts: ``_effective`` already shrinks every
+            # node's target by the quarantined idxs, and counting them as
+            # consumed too would double-subtract — the failing node would
+            # stop before processing the samples that were still healthy
+        self.metrics.inc("graph.quarantined", len(dropped))
+        if self.tracer.enabled:
+            self.tracer.instant("graph.quarantine", cat="graph",
+                                args={"node": node.name, "idxs": dropped,
+                                      "error": str(err)})
+
+    def _effective(self, expected: int | None) -> int | None:
+        """Barrier target net of quarantined samples — a dropped sample can
+        never arrive, so downstream barriers must not wait for it."""
+        if expected is None:
+            return None
+        return expected - len(self._run.quarantined_idxs)
 
     def _streaming(self, ctx, graph: RLGraph) -> bool:
         actor = getattr(ctx, "actor", None)
@@ -355,8 +435,9 @@ class GraphExecutor:
         for node in graph.nodes:
             if not node.stream or node.layout is not None:
                 continue
-            if (expected is not None
-                    and self._run.counts.get(node.name, 0) >= expected):
+            eff = self._effective(expected)
+            if (eff is not None
+                    and self._run.counts.get(node.name, 0) >= eff):
                 continue
             if not self._peek(node, ctx):
                 continue
@@ -400,9 +481,9 @@ class GraphExecutor:
         try:
             while True:
                 runnable = []
+                eff = self._effective(expected)
                 for node in graph.nodes:
-                    if (expected is not None
-                            and run.counts[node.name] >= expected):
+                    if eff is not None and run.counts[node.name] >= eff:
                         continue
                     if (expected is None and not node.stream
                             and node.name in dispatched):
@@ -413,8 +494,8 @@ class GraphExecutor:
                     key = (node.name, frozenset(idxs))
                     if key in seen:
                         continue      # no progress since last identical try
-                    if (expected is not None and not node.stream
-                            and run.counts[node.name] + len(idxs) < expected):
+                    if (eff is not None and not node.stream
+                            and run.counts[node.name] + len(idxs) < eff):
                         continue      # barrier: wait for the full batch
                     runnable.append((node, idxs))
                 if not runnable:

@@ -28,6 +28,7 @@ from repro.core.resharding import Resharder
 from repro.core.transfer_dock import (CentralReplayBuffer, DispatchLedger,
                                       TransferDock)
 from repro.core.workers import ActorWorker, ReferenceWorker, RewardWorker
+from repro.resilience import call_with_retry
 from repro.data.prompts import PromptDataset
 from repro.data.tokenizer import ByteTokenizer
 from repro.launch.mesh import make_local_mesh
@@ -98,7 +99,7 @@ class GRPOTrainer:
 
     def __init__(self, cfg: ModelConfig, rl: RLConfig, dataset: PromptDataset,
                  *, num_nodes: int = 4, microbatch: int = 0, seed: int = 0,
-                 mesh=None, tracer=None):
+                 mesh=None, tracer=None, faults=None):
         assert cfg.vocab_size >= ByteTokenizer.vocab_size
         if rl.partial_rollout and self.clear_dock_each_iteration:
             # the flag is honored by the PartialRolloutTrainer graph (which
@@ -118,6 +119,7 @@ class GRPOTrainer:
         # (fresh enabled tracer) > the disabled process default
         self.tracer = tracer if tracer is not None else (
             Tracer(enabled=True) if rl.trace_path else get_tracer())
+        self.faults = faults     # FaultPlan | None — chaos hooks everywhere
         self._iters_run = 0
 
         # --- model / optimizer state -----------------------------------
@@ -144,7 +146,7 @@ class GRPOTrainer:
         self.actor = ActorWorker(cfg, rl, eos_id=self.tok.eos_id,
                                  pad_id=self.tok.pad_id, node=0,
                                  engine=self.actor_engine_kind,
-                                 tracer=self.tracer)
+                                 tracer=self.tracer, faults=faults)
         self.ref = ReferenceWorker(cfg, self.ref_params, node=1 % num_nodes)
         self.reward = RewardWorker(dataset, node=2 % num_nodes)
         self.graph = self._build_graph()
@@ -152,10 +154,13 @@ class GRPOTrainer:
                                 tracer=self.tracer)
         if rl.use_transfer_dock:
             self.dock = TransferDock(min(rl.num_warehouses, num_nodes),
-                                     self.graph.states(), ledger)
+                                     self.graph.states(), ledger,
+                                     faults=faults)
         else:
-            self.dock = CentralReplayBuffer(self.graph.states(), ledger)
-        self.executor = GraphExecutor(self.dock, rl, tracer=self.tracer)
+            self.dock = CentralReplayBuffer(self.graph.states(), ledger,
+                                            faults=faults)
+        self.executor = GraphExecutor(self.dock, rl, tracer=self.tracer,
+                                      faults=faults)
         self.last_run = None
 
     def _build_graph(self) -> RLGraph:
@@ -174,8 +179,12 @@ class GRPOTrainer:
         self._plen = prompts.shape[1]
         prompts_rep = np.repeat(prompts, N, axis=0)
         self._metas = {i: metas[i // N] for i in range(total)}
-        self.dock.put("prompt", list(range(total)), prompts_rep,
-                      src_node=self.actor.node)
+        # the dock.put fault site fires at entry, before any row lands, so a
+        # retried put is exactly once-effective (same rows, same idxs)
+        call_with_retry(
+            lambda: self.dock.put("prompt", list(range(total)), prompts_rep,
+                                  src_node=self.actor.node),
+            self.executor.retry)
         return total
 
     # ------------------------------------------------------------------

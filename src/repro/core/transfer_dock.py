@@ -148,13 +148,14 @@ class TransferDock:
     name = "transfer_dock"
 
     def __init__(self, num_warehouses: int, states: dict[str, int],
-                 ledger: DispatchLedger | None = None):
+                 ledger: DispatchLedger | None = None, faults=None):
         """states: worker-state name -> node id it runs on."""
         self.S = num_warehouses
         self.warehouses = [TDWarehouse(node=w) for w in range(num_warehouses)]
         self.controllers = {s: TDController(s, node) for s, node in
                             states.items()}
         self.ledger = ledger or DispatchLedger()
+        self.faults = faults              # FaultPlan | None (chaos hook)
         # per-field row prototype (shape, dtype), remembered at first put so
         # empty gets stay well-shaped even after rows are consumed/cleared —
         # a field's row geometry is fixed by the algorithm config, not by
@@ -168,6 +169,11 @@ class TransferDock:
     # -- data plane ---------------------------------------------------------
     def put(self, fld: str, idxs, rows, src_node: int):
         """rows: array (n, ...) or list of per-sample arrays."""
+        # fault site at ENTRY, before any row or metadata lands: a failed
+        # put leaves the dock untouched, so the caller's retry re-runs the
+        # identical put exactly once-effective (docs/resilience.md)
+        if self.faults is not None:
+            self.faults.check("dock.put")
         for j, idx in enumerate(idxs):
             row = np.asarray(rows[j])
             if fld not in self._proto:
@@ -244,8 +250,8 @@ class CentralReplayBuffer(TransferDock):
     name = "central_replay_buffer"
 
     def __init__(self, states: dict[str, int],
-                 ledger: DispatchLedger | None = None):
-        super().__init__(1, states, ledger)
+                 ledger: DispatchLedger | None = None, faults=None):
+        super().__init__(1, states, ledger, faults=faults)
         self._states = states
 
     def request_metadata(self, state: str, fields, limit: int | None = None):

@@ -22,7 +22,7 @@ class ActorWorker:
 
     def __init__(self, cfg: ModelConfig, rl: RLConfig, *, eos_id: int,
                  pad_id: int, node: int = 0, engine: str | None = None,
-                 tracer=None):
+                 tracer=None, faults=None):
         self.cfg = cfg
         self.rl = rl
         self.node = node
@@ -40,7 +40,7 @@ class ActorWorker:
                 prefix_cache=getattr(rl, "serve_prefix_cache", True),
                 prefill_chunk=getattr(rl, "serve_prefill_chunk", 0) or None,
                 host_tier_blocks=getattr(rl, "serve_host_tier_blocks", 0),
-                tracer=tracer)
+                tracer=tracer, faults=faults)
         elif self.engine_kind == "sync":
             self.engine = RolloutEngine(
                 cfg, max_new=rl.max_response_len, eos_id=eos_id,

@@ -79,19 +79,37 @@ def main() -> None:
                     "open at ui.perfetto.dev; see docs/observability.md")
     ap.add_argument("--log-json", default=None)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0, metavar="N",
+                    help="also snapshot full train state to --checkpoint "
+                    "after every N completed iterations (enables exact "
+                    "--resume mid-run; see docs/resilience.md)")
     ap.add_argument("--resume", default=None,
-                    help="checkpoint path to restore the policy from")
+                    help="checkpoint path to restore from: a train-state "
+                    "snapshot resumes the run at the saved iteration "
+                    "(exact replay); a legacy params-only checkpoint "
+                    "restores just the policy weights")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="deterministic fault injection, e.g. "
+                    "'stage.ref_inference@1,swap.in@2,dock.put@3:fatal' — "
+                    "site@hit[:kind] entries; see docs/resilience.md")
     args = ap.parse_args()
     if args.partial_rollout and args.algorithm == "ppo":
         ap.error("--partial-rollout implements the GRPO family; "
                  "it cannot be combined with --algorithm ppo")
 
     # imports deferred so --help never initializes jax
-    from repro.checkpoint import load_pytree, save_pytree
+    from repro.checkpoint import (is_train_state, load_pytree,
+                                  load_train_state, save_pytree,
+                                  save_train_state)
     from repro.core.partial import PartialRolloutTrainer
     from repro.core.ppo_trainer import PPOTrainer
     from repro.core.trainer import GRPOTrainer
     from repro.data.prompts import PromptDataset, arithmetic_task, pattern_task
+    from repro.resilience import FatalFault, FaultPlan
+
+    if args.checkpoint_every and not args.checkpoint:
+        ap.error("--checkpoint-every needs --checkpoint PATH")
+    faults = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.smoke:
@@ -140,21 +158,37 @@ def main() -> None:
     if args.partial_rollout:
         trainer = PartialRolloutTrainer(cfg, rl, ds, budget=args.rollout_budget,
                                         num_nodes=args.num_nodes,
-                                        seed=args.seed)
+                                        seed=args.seed, faults=faults)
     elif args.algorithm == "ppo":
         trainer = PPOTrainer(cfg, rl, ds, num_nodes=args.num_nodes,
-                             seed=args.seed)
+                             seed=args.seed, faults=faults)
     else:
         trainer = GRPOTrainer(cfg, rl, ds, num_nodes=args.num_nodes,
-                              seed=args.seed)
+                              seed=args.seed, faults=faults)
+    start = 0
     if args.resume:
-        trainer.params = load_pytree(args.resume, trainer.params)
-        print(f"restored policy from {args.resume}")
+        if is_train_state(args.resume):
+            start = load_train_state(args.resume, trainer)
+            print(f"resumed train state from {args.resume} "
+                  f"(iteration {start})")
+        else:
+            trainer.params = load_pytree(args.resume, trainer.params)
+            print(f"restored policy from {args.resume}")
 
     log = []
-    for it in range(args.iterations):
+    for it in range(start, args.iterations):
         t0 = time.perf_counter()
-        st = trainer.iteration(args.global_batch)
+        try:
+            st = trainer.iteration(args.global_batch)
+        except FatalFault as err:
+            # injected unrecoverable fault (chaos testing): flush what we
+            # have so a --resume run can be compared against the log, then
+            # exit with a distinct status the CI smoke asserts on
+            print(f"fatal injected fault: {err}")
+            if args.log_json:
+                with open(args.log_json, "w") as f:
+                    json.dump(log, f, indent=1)
+            raise SystemExit(3)
         tput = trainer.throughput(st, args.global_batch)
         rec = {
             "iteration": it, "reward": st.reward_mean, "loss": st.loss,
@@ -167,6 +201,8 @@ def main() -> None:
         print(f"[{it:4d}] reward={st.reward_mean:6.3f} loss={st.loss:8.4f} "
               f"kl={st.kl:.5f} T={tput:8.1f} tok/s/dev "
               f"ete={rec['ete_s']:6.2f}s")
+        if args.checkpoint_every and (it + 1) % args.checkpoint_every == 0:
+            save_train_state(args.checkpoint, trainer, iteration=it + 1)
 
     if args.log_json:
         with open(args.log_json, "w") as f:
@@ -175,7 +211,11 @@ def main() -> None:
         print(f"wrote trace to {trainer.export_trace()} "
               f"(open at https://ui.perfetto.dev)")
     if args.checkpoint:
-        save_pytree(args.checkpoint, trainer.params, step=args.iterations)
+        if args.checkpoint_every:
+            save_train_state(args.checkpoint, trainer,
+                             iteration=args.iterations)
+        else:
+            save_pytree(args.checkpoint, trainer.params, step=args.iterations)
         print(f"saved checkpoint to {args.checkpoint}")
 
 

@@ -1,0 +1,23 @@
+"""repro.resilience — deterministic fault injection + recovery policy.
+
+The failure-handling layer for the dataflow runtime (docs/resilience.md):
+
+  * :class:`FaultPlan` — a replayable, seeded schedule of injected
+    failures at named sites (``stage.<node>``, ``dock.put``, ``swap.out``,
+    ``swap.in``), threaded into ``GraphExecutor`` / ``TransferDock`` /
+    ``SwapEngine`` via their ``faults=`` hooks.
+  * :class:`RetryPolicy` / :func:`call_with_retry` — capped deterministic
+    backoff for :class:`TransientError` failures (the executor's stage
+    retry and dock-put retry paths).
+
+Recovery semantics live with the components: stage retry + sample
+quarantine in ``repro.core.graph``, swap-failure degradation in
+``repro.serve``, iteration checkpoint/resume in ``repro.checkpoint``.
+"""
+from repro.resilience.faults import (FatalFault, FaultPlan, FaultSpec,
+                                     InjectedFault, TransientError,
+                                     TransientFault)
+from repro.resilience.retry import RetryPolicy, call_with_retry
+
+__all__ = ["FaultPlan", "FaultSpec", "InjectedFault", "TransientFault",
+           "FatalFault", "TransientError", "RetryPolicy", "call_with_retry"]

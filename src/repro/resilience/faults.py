@@ -1,0 +1,181 @@
+"""Deterministic fault injection: a replayable schedule of named failures.
+
+Chaos testing for the dataflow runtime.  A :class:`FaultPlan` is a
+schedule — "the 3rd time execution passes fault site ``swap.out``, fail it"
+— threaded into the runtime via the ``faults=`` constructor hook on
+``GraphExecutor``, ``TransferDock``, and ``SwapEngine``.  Instrumented code
+calls ``plan.check(site)`` at each named site; the plan counts occurrences
+per site and raises at exactly the scheduled hits.  Because scheduling is
+keyed on (site, occurrence-count) rather than wall-clock or process-global
+RNG, a plan replays the same failures on every run of a deterministic
+workload (DET002: randomized plans use an explicit ``random.Random(seed)``
+instance, never the module-level generator).
+
+Fault sites (cataloged in docs/resilience.md; FLT001 enforces the catalog):
+
+  * ``stage.<node>`` — entry of a graph stage dispatch (one name per
+    ``StageNode``, e.g. ``stage.actor_generation``).
+  * ``dock.put``     — entry of ``TransferDock.put``, before any row lands
+    (so a retried put is exactly idempotent).
+  * ``swap.out``     — host-tier spill job, inside the swap worker.
+  * ``swap.in``      — host-tier swap-in job, inside the swap worker.
+
+Two failure kinds:
+
+  * ``transient`` (:class:`TransientFault`) — the recovery policy's bread
+    and butter: retried by ``GraphExecutor`` with capped deterministic
+    backoff; inside the swap worker any failure (transient or not)
+    permanently degrades the tier (see docs/resilience.md).
+  * ``fatal`` (:class:`FatalFault`) — never retried; propagates to the
+    driver, which exits with status 3 (``train.py``).  Used by CI to force
+    a mid-run abort and prove ``--resume``.
+
+The textual spec format round-trips through :meth:`FaultPlan.parse` /
+:meth:`FaultPlan.describe` so any observed failure schedule can be
+replayed from a CLI flag::
+
+    --fault-plan 'stage.reward@1,swap.out@2,stage.actor_update@3:fatal'
+"""
+from __future__ import annotations
+
+import random
+import threading
+from dataclasses import dataclass
+
+KINDS = ("transient", "fatal")
+
+
+class TransientError(RuntimeError):
+    """Base class for errors the retry policy may safely re-attempt.
+
+    Raise a subclass from a stage callable to opt a failure into
+    ``GraphExecutor``'s retry-with-backoff path; anything else propagates
+    immediately."""
+
+
+class InjectedFault(RuntimeError):
+    """An injected failure (never raised by real code paths)."""
+
+    def __init__(self, site: str, hit: int):
+        super().__init__(f"injected fault at {site}@{hit}")
+        self.site = site
+        self.hit = hit
+
+
+class TransientFault(InjectedFault, TransientError):
+    """Injected failure the retry/degradation policy is expected to absorb."""
+
+
+class FatalFault(InjectedFault):
+    """Injected failure that must abort the run (exercises checkpoint/resume)."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled failure: the ``hit``-th (1-based) arrival at ``site``."""
+    site: str
+    hit: int
+    kind: str = "transient"
+
+    def __post_init__(self):
+        if self.hit < 1:
+            raise ValueError(f"hit is 1-based, got {self.hit}")
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(expected one of {KINDS})")
+
+    def describe(self) -> str:
+        text = f"{self.site}@{self.hit}"
+        return text if self.kind == "transient" else f"{text}:{self.kind}"
+
+
+class FaultPlan:
+    """A deterministic, thread-safe schedule of injected failures.
+
+    ``check(site)`` increments the site's arrival counter and raises a
+    :class:`TransientFault` / :class:`FatalFault` when the arrival matches
+    a scheduled spec.  Counters are per-plan state: ``reset()`` rewinds the
+    schedule so the same plan object can replay against a second run.
+    """
+
+    def __init__(self, specs: list[FaultSpec] | None = None):
+        self._lock = threading.Lock()
+        self._sched: dict[str, dict[int, str]] = {}  # guarded-by: _lock
+        self._counts: dict[str, int] = {}            # guarded-by: _lock
+        self._fired: list[FaultSpec] = []            # guarded-by: _lock
+        for spec in specs or []:
+            self._sched.setdefault(spec.site, {})[spec.hit] = spec.kind
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def parse(cls, text: str) -> "FaultPlan":
+        """Build a plan from ``site@hit[:kind]`` comma-separated specs
+        (the ``--fault-plan`` flag format; inverse of :meth:`describe`)."""
+        specs = []
+        for item in text.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            site, _, rest = item.partition("@")
+            if not site or not rest:
+                raise ValueError(f"bad fault spec {item!r} "
+                                 f"(expected site@hit[:kind])")
+            hit_s, _, kind = rest.partition(":")
+            specs.append(FaultSpec(site, int(hit_s), kind or "transient"))
+        return cls(specs)
+
+    @classmethod
+    def random_plan(cls, seed: int, sites: list[str], n: int, *,
+                    max_hit: int = 16, kind: str = "transient") -> "FaultPlan":
+        """Seeded randomized plan for sweep tests: ``n`` faults drawn over
+        ``sites`` x ``[1, max_hit]`` from an explicit ``random.Random(seed)``
+        instance (no process-global RNG — DET002)."""
+        rng = random.Random(seed)
+        chosen: set[tuple[str, int]] = set()
+        while len(chosen) < n:
+            chosen.add((rng.choice(sites), rng.randint(1, max_hit)))
+        return cls([FaultSpec(site, hit, kind)
+                    for site, hit in sorted(chosen)])
+
+    # -- the injection point ------------------------------------------------
+    def check(self, site: str) -> None:
+        """Count an arrival at ``site``; raise if this hit is scheduled."""
+        with self._lock:
+            hit = self._counts.get(site, 0) + 1
+            self._counts[site] = hit
+            kind = self._sched.get(site, {}).get(hit)
+            if kind is None:
+                return
+            self._fired.append(FaultSpec(site, hit, kind))
+        if kind == "fatal":
+            raise FatalFault(site, hit)
+        raise TransientFault(site, hit)
+
+    # -- introspection / replay ---------------------------------------------
+    @property
+    def fired(self) -> list[FaultSpec]:
+        """Specs that actually triggered so far, in firing order."""
+        with self._lock:
+            return list(self._fired)
+
+    def counts(self) -> dict[str, int]:
+        """Arrivals seen per site (for coverage assertions in sweeps)."""
+        with self._lock:
+            return dict(self._counts)
+
+    def reset(self) -> None:
+        """Rewind arrival counters so the plan replays from the start."""
+        with self._lock:
+            self._counts.clear()
+            self._fired.clear()
+
+    def describe(self) -> str:
+        """The plan as a ``--fault-plan`` spec string (parse round-trips)."""
+        with self._lock:
+            specs = [FaultSpec(site, hit, kind)
+                     for site, hits in sorted(self._sched.items())
+                     for hit, kind in sorted(hits.items())]
+        return ",".join(s.describe() for s in specs)
+
+    def __repr__(self) -> str:
+        return f"FaultPlan({self.describe()!r})"

@@ -1,0 +1,50 @@
+"""Retry-with-backoff policy for transient failures.
+
+The policy is deliberately deterministic: backoff grows geometrically from
+``backoff_base_s`` and is capped at ``backoff_cap_s`` — no jitter, so a
+replayed :class:`~repro.resilience.faults.FaultPlan` produces the same
+retry schedule every run.  Only :class:`TransientError` subclasses are
+retried; everything else propagates on first raise.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.resilience.faults import TransientError
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """How many times to re-attempt a transient failure, and how long to
+    wait between attempts (capped geometric backoff, no jitter)."""
+    max_retries: int = 2
+    backoff_base_s: float = 0.001
+    backoff_cap_s: float = 0.05
+
+    def backoff(self, attempt: int) -> float:
+        """Sleep before retry number ``attempt`` (0-based)."""
+        return min(self.backoff_base_s * (2 ** attempt), self.backoff_cap_s)
+
+
+def call_with_retry(fn, policy: RetryPolicy, *, retries: int | None = None,
+                    on_retry=None):
+    """Call ``fn()`` retrying :class:`TransientError` up to the budget.
+
+    ``retries`` overrides ``policy.max_retries`` (a per-call budget, e.g.
+    ``StageNode.max_retries``); ``on_retry(attempt, err)`` is invoked
+    before each backoff sleep (telemetry hook).  The final failure
+    re-raises the last transient error.
+    """
+    budget = policy.max_retries if retries is None else retries
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except TransientError as err:
+            if attempt >= budget:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, err)
+            time.sleep(policy.backoff(attempt))
+            attempt += 1

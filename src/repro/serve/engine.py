@@ -84,7 +84,7 @@ from repro.configs.base import ModelConfig
 from repro.core.rollout import RolloutResult, sample_tokens
 from repro.models.model import build_model
 from repro.obs import MetricsRegistry, get_tracer
-from repro.serve.host_tier import HostKVTier
+from repro.serve.host_tier import HostKVTier, SwapWorkerError
 from repro.serve.paged_cache import (PagedKVCache, blocks_for,
                                      scatter_prefill, scatter_token)
 from repro.serve.scheduler import Request, Scheduler
@@ -124,7 +124,8 @@ class ServingEngine:
                  max_slots: int = 8, block_size: int = 16,
                  max_seq_len: int | None = None, num_blocks: int | None = None,
                  prefix_cache: bool = True, prefill_chunk: int | None = None,
-                 host_tier_blocks: int = 0, seed: int = 0, tracer=None):
+                 host_tier_blocks: int = 0, seed: int = 0, tracer=None,
+                 faults=None):
         if cfg.arch_type not in ("dense", "moe"):
             # ssm/hybrid cache recurrent state (nothing to page); vlm would
             # need per-request vision_embeds carried through preemption
@@ -181,8 +182,10 @@ class ServingEngine:
         self.host_tier = (
             HostKVTier(cfg, num_blocks=host_tier_blocks,
                        block_size=block_size, metrics=self.metrics,
-                       tracer=self.tracer)
+                       tracer=self.tracer, faults=faults)
             if host_tier_blocks else None)
+        self._host_degraded = False       # swap worker failed: tier dropped,
+        #                                   recompute-preemption mode
         self._step_prefill = 0
         if max_seq_len is not None:
             self._ensure_state(max_seq_len)
@@ -210,18 +213,27 @@ class ServingEngine:
                     f"mid-decode; construct the engine with max_seq_len>= "
                     f"{max_seq} for mixed loads")
         waiting = self.sched.waiting if self.sched is not None else ()
-        if self.cache is not None and self.host_tier is not None:
+        if (self.cache is not None and self.host_tier is not None
+                and not self._host_degraded):
             # regrow drops the old pool; any in-flight swap-in targeted its
             # rows, so retire those (the owning requests were preempted —
             # they re-prefill; host entries themselves are content-addressed
             # and survive the regrow)
-            self.host_tier.swap.drain()
-            self.host_tier.swap.pop_ready()
+            try:
+                self.host_tier.swap.drain()
+                self.host_tier.swap.pop_ready()
+            except SwapWorkerError:
+                # the old pool is being dropped anyway, so no garbage rows
+                # can survive — just flip to recompute-preemption mode
+                self.host_tier.disable()
+                self.metrics.inc("serve.swap.degraded")
+                self._host_degraded = True
         num_blocks = self._num_blocks_req or self.max_slots * mb
         self.cache = PagedKVCache(self.cfg, num_blocks=num_blocks,
                                   block_size=self.block_size,
                                   max_blocks_per_seq=mb,
-                                  host=self.host_tier)
+                                  host=(None if self._host_degraded
+                                        else self.host_tier))
         self.sched = Scheduler(self.cache, self.max_slots,
                                prefix_cache=self.prefix_cache,
                                tracer=self.tracer, metrics=self.metrics)
@@ -275,6 +287,7 @@ class ServingEngine:
             "swap_in_blocks": m.value("serve.swap.in_blocks"),
             "swap_in_bytes": m.value("serve.swap.in_bytes"),
             "swap_host_evictions": m.value("serve.swap.host_evictions"),
+            "swap_degraded": m.value("serve.swap.degraded"),
             "host_tier_blocks": self.host_tier_blocks,
             "host_resident_blocks": (len(self.host_tier)
                                      if self.host_tier else 0),
@@ -456,6 +469,14 @@ class ServingEngine:
         preempted = self.sched.ensure_capacity()
         if preempted:
             self.metrics.inc("serve.preemptions", len(preempted))
+        if self.host_tier is not None and not self._host_degraded:
+            # force the swap drain barrier now — after all of this step's
+            # swap traffic was scheduled, BEFORE decode reads the pools: a
+            # worker failure degrades the tier here, and the victims are
+            # preempted before any garbage swap-in row can reach compute
+            _ = self.cache.pool_k
+            if self.cache.degraded:
+                self._handle_degradation()
         decodable = [slot for slot, req in self.sched.running.items()
                      if not self._prefilling(req)]
         if not decodable:
@@ -503,6 +524,32 @@ class ServingEngine:
                 self.sched.register_prefix(req)
             self._retire(req, finished)
         return finished
+
+    def _handle_degradation(self) -> None:
+        """The swap worker failed and the cache detached the tier
+        (``PagedKVCache._degrade_host``) — finish the flip to plain
+        recompute-preemption mode.  Every running request owning a block
+        whose swap-in never landed is preempted (youngest first, matching
+        ``ensure_capacity``'s victim order): its rows are garbage, and
+        recompute re-prefills them bit-identically, so greedy outputs stay
+        bitwise equal to a fault-free (or tier-off) run."""
+        self._host_degraded = True
+        bad = self.cache.take_degraded()
+        victims = []
+        if bad:
+            for slot in reversed(self.sched._admit_order):
+                blocks = self.sched._blocks.get(slot)
+                if blocks is not None and bad.intersection(blocks) \
+                        and self.sched.running.get(slot) is not None:
+                    victims.append(slot)
+            for slot in victims:
+                self.sched._preempt(slot)
+            if victims:
+                self.metrics.inc("serve.preemptions", len(victims))
+        if self.tracer.enabled:
+            self.tracer.instant("serve.swap.degraded", cat="serve", args={
+                "bad_blocks": sorted(int(b) for b in bad),
+                "preempted": len(victims)})
 
     def drain(self, params) -> list[RequestOutput]:
         """Run steps until every queued request has finished.  Budgeted
@@ -648,6 +695,16 @@ class ServingEngine:
         prefill tokens actually spent (rematch may shrink the tail)."""
         self.metrics.inc("serve.shared_prefill_tokens",
                          self.sched.rematch(req))
+        # pool reads are the swap-failure barrier: take them BEFORE building
+        # the chunk, and if the tier degraded under them, resolve victims
+        # first — this request itself may own a garbage swap-in block, in
+        # which case it was just preempted and must not compute this chunk
+        pool_k, pool_v = self.cache.pool_k, self.cache.pool_v
+        if (self.host_tier is not None and not self._host_degraded
+                and self.cache.degraded):
+            self._handle_degradation()
+            if self.sched.running.get(req.slot) is not req:
+                return 0              # preempted: re-admitted via recompute
         take = min(take, req.prefill_len - req.cache_len)
         toks = req.refill_tokens
         start = req.cache_len
@@ -655,7 +712,7 @@ class ServingEngine:
         chunk = np.full((cb,), self.pad_id, np.int32)
         chunk[:take] = toks[start:start + take]
         logits, krows, vrows = self._chunk(
-            params, self.cache.pool_k, self.cache.pool_v,
+            params, pool_k, pool_v,
             jnp.asarray(self.sched.tables[req.slot]),
             jnp.asarray(chunk[None]), jnp.int32(start), jnp.int32(take - 1))
         flat = self._write_rows(req.slot, start, 0, take, cb)

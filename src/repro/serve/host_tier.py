@@ -66,6 +66,15 @@ from repro.models import layers as L
 from repro.obs import NULL_SPAN, MetricsRegistry, get_tracer
 
 
+class SwapWorkerError(RuntimeError):
+    """The swap worker failed a job.  Raised on the CALLER's thread at the
+    next submit/drain point; the recovery policy (docs/resilience.md) is
+    permanent degradation — the tier is a cache over recomputable state,
+    so ``PagedKVCache`` drops it wholesale and the engine falls back to
+    recompute-preemption, preserving greedy bit-identity (tier-off is
+    proven bitwise-equal to tier-on)."""
+
+
 class SwapEngine:
     """Async host<->device block mover (one worker, bounded staging).
 
@@ -79,14 +88,18 @@ class SwapEngine:
     the engine is that far behind (back-pressure, not growth).
     """
 
-    def __init__(self, tier: "HostKVTier", *, depth: int = 2, tracer=None):
+    def __init__(self, tier: "HostKVTier", *, depth: int = 2, tracer=None,
+                 faults=None):
         self.tier = tier
         self.depth = depth
         self.tracer = tracer if tracer is not None else get_tracer()
+        self.faults = faults               # FaultPlan | None (chaos hook)
         self._jobs: queue.Queue = queue.Queue(maxsize=depth)
         self._cond = threading.Condition()
         self._pending = 0                  # guarded-by: _cond — not yet run
         self._ready: list[tuple] = []      # guarded-by: _cond — (flat, k, v)
+        self._failed_in: list = []         # guarded-by: _cond — flat_rows of
+        #                                    swap-ins whose upload never ran
         self._error: BaseException | None = None  # guarded-by: _cond
         self._thread: threading.Thread | None = None
         # swap-in staging ring: `depth` preallocated host buffer pairs.
@@ -140,12 +153,25 @@ class SwapEngine:
             if self._pending and self.tracer.enabled:
                 with self.tracer.span("serve.swap.drain", cat="serve",
                                       args={"pending": self._pending}):
-                    while self._pending:
-                        self._cond.wait()
+                    self._wait_pending()
             else:
-                while self._pending:
-                    self._cond.wait()
+                self._wait_pending()
             self._raise_if_failed()
+
+    def _wait_pending(self) -> None:  # requires-lock: _cond
+        """Wait for pending jobs, robust to a dead worker: if the thread
+        died with jobs outstanding (it can only exit between jobs, so this
+        means it was killed externally), record the failure instead of
+        waiting forever."""
+        while self._pending:
+            if self._thread is None or not self._thread.is_alive():
+                if self._error is None:
+                    self._error = RuntimeError(
+                        f"swap worker died with {self._pending} "
+                        f"job(s) pending")
+                self._pending = 0
+                break
+            self._cond.wait(timeout=0.05)
 
     def pop_ready(self) -> list[tuple]:
         """Take ownership of the completed swap-ins ``(flat_rows, dev_k,
@@ -156,24 +182,74 @@ class SwapEngine:
             ready, self._ready = self._ready, []
         return ready
 
+    def pop_failed(self) -> list:
+        """Take ownership of the ``flat_rows`` of swap-ins whose upload
+        failed — their target pool rows were never written (garbage).  The
+        cache's degradation path preempts the owning requests so the rows
+        are re-prefilled, never read."""
+        with self._cond:
+            failed, self._failed_in = self._failed_in, []
+        return failed
+
+    def release_stage(self, stage: int) -> None:
+        """Return a staging buffer acquired for a swap-in that was never
+        submitted (the submit itself failed)."""
+        self._free_stage.put(stage)
+
     @property
     def in_flight(self) -> int:
         with self._cond:
             return self._pending
 
-    def close(self) -> None:
+    def close(self, timeout: float = 10.0) -> None:
         """Drain and stop the worker (tests / long-lived drivers; the
-        daemon thread dies with the process otherwise)."""
-        if self._thread is not None and self._thread.is_alive():
-            self.drain()
-            self._jobs.put(None)
-            self._thread.join(timeout=10.0)
-        self._thread = None
+        daemon thread dies with the process otherwise).  A pending worker
+        failure is surfaced on EVERY path — including when the worker is
+        already dead — never silently dropped; a join that times out is
+        counted (``serve.swap.close_timeout``) instead of being mistaken
+        for a clean stop."""
+        try:
+            if self._thread is not None and self._thread.is_alive():
+                self.drain()
+                self._jobs.put(None)
+                self._thread.join(timeout=timeout)
+                if self._thread.is_alive():
+                    self.tier.metrics.inc("serve.swap.close_timeout")
+                    if self.tracer.enabled:
+                        self.tracer.instant("serve.swap.close_timeout",
+                                            cat="serve",
+                                            args={"timeout_s": timeout})
+        finally:
+            self._thread = None
+            with self._cond:
+                self._raise_if_failed()
+
+    def abandon(self) -> None:
+        """Degradation teardown: clear the failure state and detach without
+        draining.  The tier is being dropped wholesale, so outstanding byte
+        movement no longer matters; queued jobs (and the stop sentinel)
+        still run in FIFO order on the worker, releasing any staging
+        buffers they own."""
+        with self._cond:
+            self._error = None
+            self._failed_in = []
+            self._abandoned = True
+        try:
+            self._jobs.put_nowait(None)
+        except queue.Full:
+            pass                          # worker drains the queue, then the
+        #                                   next close()/sentinel stops it
 
     def _raise_if_failed(self) -> None:  # requires-lock: _cond
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise RuntimeError("KV swap worker failed") from err
+        if self._error is None:
+            return
+        if getattr(self, "_abandoned", False):
+            return                        # post-degradation failures are
+        #                                   noise: the tier is already gone
+        # NOT consumed: the failure keeps raising until abandon() — a debug
+        # drain (check_consistent) must not swallow the signal before the
+        # cache's pool-read barrier converts it into degradation
+        raise SwapWorkerError("KV swap worker failed") from self._error
 
     # -- worker -------------------------------------------------------------
     def _ensure_worker(self) -> None:
@@ -192,6 +268,10 @@ class SwapEngine:
             except BaseException as e:  # noqa: BLE001 — surfaced at drain
                 with self._cond:
                     self._error = e
+                    if job[0] == "in":
+                        # the upload never ran: the target pool rows hold
+                        # garbage — record them for the degradation path
+                        self._failed_in.append(job[1])
             finally:
                 with self._cond:
                     self._pending -= 1
@@ -201,6 +281,8 @@ class SwapEngine:
         tier, tr = self.tier, self.tracer
         if job[0] == "out":
             _, slot, dev_k, dev_v = job
+            if self.faults is not None:
+                self.faults.check("swap.out")
             span = (tr.span("serve.swap.out", cat="serve",
                             args={"host_slot": slot,
                                   "bytes": tier.block_bytes})
@@ -217,22 +299,28 @@ class SwapEngine:
                     tier._inflight_out[slot] = n
         else:
             _, flat_rows, stage = job
-            span = (tr.span("serve.swap.in", cat="serve",
-                            args={"bytes": tier.block_bytes})
-                    if tr.enabled else NULL_SPAN)
-            with span:
-                # device_put + MATERIALIZED copy: on CPU backends a plain
-                # device_put may alias the numpy staging buffer (zero-copy)
-                # or read it lazily under async dispatch, and the buffer is
-                # reused the moment we release it — so copy through a
-                # device-side op and block until it has actually executed
-                # before handing the stage back
-                dev_k = jnp.array(self._stage_k[stage], copy=True)
-                dev_v = jnp.array(self._stage_v[stage], copy=True)
-                jax.block_until_ready((dev_k, dev_v))
-            self._free_stage.put(stage)
-            with self._cond:
-                self._ready.append((flat_rows, dev_k, dev_v))
+            try:
+                if self.faults is not None:
+                    self.faults.check("swap.in")
+                span = (tr.span("serve.swap.in", cat="serve",
+                                args={"bytes": tier.block_bytes})
+                        if tr.enabled else NULL_SPAN)
+                with span:
+                    # device_put + MATERIALIZED copy: on CPU backends a
+                    # plain device_put may alias the numpy staging buffer
+                    # (zero-copy) or read it lazily under async dispatch,
+                    # and the buffer is reused the moment we release it —
+                    # so copy through a device-side op and block until it
+                    # has actually executed before handing the stage back
+                    dev_k = jnp.array(self._stage_k[stage], copy=True)
+                    dev_v = jnp.array(self._stage_v[stage], copy=True)
+                    jax.block_until_ready((dev_k, dev_v))
+                with self._cond:
+                    self._ready.append((flat_rows, dev_k, dev_v))
+            finally:
+                # the staging buffer goes back even when the upload fails —
+                # a leaked stage would deadlock acquire_stage() forever
+                self._free_stage.put(stage)
 
 
 class HostKVTier:
@@ -248,7 +336,7 @@ class HostKVTier:
     """
 
     def __init__(self, cfg: ModelConfig, *, num_blocks: int, block_size: int,
-                 metrics=None, tracer=None, staging: int = 2):
+                 metrics=None, tracer=None, staging: int = 2, faults=None):
         if num_blocks < 1:
             raise ValueError(f"host tier needs >= 1 block, got {num_blocks}")
         n, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
@@ -268,7 +356,10 @@ class HostKVTier:
         # host slots with a spill still in flight:
         # take() must not read the store before the worker wrote it
         self._inflight_out: dict[int, int] = {}  # guarded-by: swap._cond
-        self.swap = SwapEngine(self, depth=staging, tracer=tracer)
+        self.disabled = False             # set by disable() after a worker
+        #                                   failure — the tier stops caching
+        self.swap = SwapEngine(self, depth=staging, tracer=tracer,
+                               faults=faults)
 
     def __len__(self) -> int:
         return len(self._index)
@@ -293,6 +384,8 @@ class HostKVTier:
         is full the LRU key is evicted: it falls all the way out of the
         tiered index and its next use pays recompute, exactly the pre-tier
         behavior."""
+        if self.disabled:
+            return
         if key in self._index:
             self._index.move_to_end(key)
             return
@@ -353,6 +446,20 @@ class HostKVTier:
         self._index.clear()
         self._slot_key.clear()
         self._free = deque(range(self.num_blocks))
+
+    def disable(self) -> None:
+        """Swap-failure degradation: drop the whole host index and stop
+        caching.  Every hosted prefix is forgotten — the tier is a cache
+        over recomputable state, so dropping is always safe (future
+        readmissions pay recompute, exactly the tier-off behavior) — and
+        the abandoned worker is sent its stop sentinel without waiting."""
+        self.disabled = True
+        self._index.clear()
+        self._slot_key.clear()
+        self._free = deque(range(self.num_blocks))
+        with self.swap._cond:
+            self._inflight_out.clear()
+        self.swap.abandon()
 
     # -- debugging ----------------------------------------------------------
     def check_consistent(self) -> None:

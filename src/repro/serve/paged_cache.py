@@ -80,6 +80,7 @@ from jax.experimental import pallas as pl
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.models import layers as L
+from repro.serve.host_tier import SwapWorkerError
 
 
 def blocks_for(ntokens: int, block_size: int) -> int:
@@ -219,6 +220,16 @@ class PagedKVCache:
         self.null_block = num_blocks          # last block = write sink
         self.host = host                      # HostKVTier | None
         self._pending_in = 0                  # swap-ins scheduled, unscattered
+        # swap-failure degradation state (docs/resilience.md): a worker
+        # failure anywhere funnels through _apply_swap_ins at the next pool
+        # read — the read barrier every compute passes — which detaches the
+        # tier (host -> None), drops garbage-row index entries and records
+        # the garbage blocks for the engine to preempt
+        self._host_error = None               # pending failure -> degrade at
+        #                                       the next pool-read barrier
+        self.degraded = False                 # tier was dropped this session
+        self._degraded_blocks: set[int] = set()  # swap-in targets whose
+        #                                       upload failed (garbage rows)
         n, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
         rows = (num_blocks + 1) * block_size
         dt = L.cdtype(cfg)
@@ -280,12 +291,62 @@ class PagedKVCache:
         was freed (even re-allocated) after the swap-in was scheduled;
         ordering keeps that safe — the stale write lands HERE, before any
         later owner's prefill/decode write, because those writes also read
-        the pool through the draining getter first."""
-        self.host.swap.drain()
-        for flat, dev_k, dev_v in self.host.swap.pop_ready():
+        the pool through the draining getter first.
+
+        This barrier is also where swap-WORKER failures resolve: every
+        compute read passes through it, so a failure (raised by the drain,
+        or recorded earlier by a submit-side catch) always degrades the
+        tier BEFORE any garbage swap-in row becomes readable."""
+        if self.host is None:                 # degraded under our feet
+            self._pending_in = 0
+            return
+        err = self._host_error
+        self._host_error = None
+        try:
+            self.host.swap.drain()
+        except SwapWorkerError as e:
+            err = e
+        if err is None:
+            for flat, dev_k, dev_v in self.host.swap.pop_ready():
+                self._pool_k = _swap_write(self._pool_k, dev_k, flat)
+                self._pool_v = _swap_write(self._pool_v, dev_v, flat)
+            self._pending_in = 0
+            return
+        self._degrade_host()
+
+    def _degrade_host(self) -> None:
+        """Swap-failure degradation: detach the tier and flip to plain
+        recompute-preemption mode.  Completed swap-ins still land (their
+        bytes are real); FAILED swap-ins' target blocks hold garbage, so
+        their index entries are dropped (never matched again) and the
+        blocks are recorded for the engine to preempt their owners —
+        recompute re-prefills them bit-identically."""
+        tier, self.host = self.host, None
+        for flat, dev_k, dev_v in tier.swap.pop_ready():
             self._pool_k = _swap_write(self._pool_k, dev_k, flat)
             self._pool_v = _swap_write(self._pool_v, dev_v, flat)
+        for flat in tier.swap.pop_failed():
+            b = int(flat[0]) // self.block_size
+            self._degraded_blocks.add(b)
+            key = self._block_key.pop(b, None)
+            if key is not None:
+                del self._index[key]
         self._pending_in = 0
+        self.degraded = True
+        tier.disable()
+        tier.metrics.inc("serve.swap.degraded")
+
+    def _host_failure(self, err: SwapWorkerError) -> None:
+        """A submit-side call caught a worker failure: remember it and
+        force the next pool read through the barrier, which degrades."""
+        self._host_error = err
+        self._pending_in = max(self._pending_in, 1)
+
+    def take_degraded(self) -> set:
+        """Blocks whose swap-in upload failed (garbage rows), cleared on
+        read — the engine preempts their owners (recompute is bit-safe)."""
+        bad, self._degraded_blocks = self._degraded_blocks, set()
+        return bad
 
     def _block_rows(self, b: int) -> slice:
         return slice(b * self.block_size, (b + 1) * self.block_size)
@@ -326,8 +387,17 @@ class PagedKVCache:
                     # async device_get reads a true snapshot even after
                     # the new owner overwrites the pool
                     rows = self._block_rows(b)
-                    self.host.put(key, self.pool_k[:, rows],
-                                  self.pool_v[:, rows])
+                    pk = self.pool_k[:, rows]
+                    pv = self.pool_v[:, rows]
+                    # the getter read is a degradation barrier — re-check
+                    # the tier survived it before spilling; a failed submit
+                    # just skips the spill (content dropped, tier-off
+                    # behavior) and degrades at the next barrier
+                    if self.host is not None:
+                        try:
+                            self.host.put(key, pk, pv)
+                        except SwapWorkerError as e:
+                            self._host_failure(e)
             self._ref[b] = 1
             return b
         from repro.serve.scheduler import OutOfBlocksError
@@ -407,13 +477,36 @@ class PagedKVCache:
         copy was evicted between match and claim (caller falls back to
         recompute for this and deeper blocks)."""
         host = self.host
-        stage = host.take(key)
+        if host is None:
+            return None
+        try:
+            stage = host.take(key)
+        except SwapWorkerError as e:
+            # take()'s drain tripped on a worker failure: fall back to
+            # recompute for this block (the caller's None path) and degrade
+            # at the next pool-read barrier
+            self._host_failure(e)
+            return None
         if stage is None:
             return None
         b = self.alloc() if into is None else into
+        if self.host is None:
+            # alloc()'s pool read degraded the tier under us: the staging
+            # buffer was never submitted, the fresh block was never written
+            host.swap.release_stage(stage)
+            if into is None:
+                self.free([b])
+            return None
         bs = self.block_size
         flat = jnp.asarray(np.arange(b * bs, (b + 1) * bs, dtype=np.int32))
-        host.swap.submit_in(flat, stage)
+        try:
+            host.swap.submit_in(flat, stage)
+        except SwapWorkerError as e:
+            host.swap.release_stage(stage)
+            if into is None:
+                self.free([b])
+            self._host_failure(e)
+            return None
         self._pending_in += 1
         self.register(key, b)
         host.metrics.inc("serve.swap.in_blocks")
@@ -428,7 +521,10 @@ class PagedKVCache:
         self._index.clear()
         self._block_key.clear()
         if self.host is not None:
-            self.host.flush()
+            try:
+                self.host.flush()
+            except SwapWorkerError as e:
+                self._host_failure(e)
 
     def reset(self) -> None:
         self._ref = [0] * self.num_blocks

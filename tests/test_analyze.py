@@ -352,6 +352,42 @@ def test_drift_accepts_documented_knobs_and_cataloged_names(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# faults (FLT001)
+# ---------------------------------------------------------------------------
+
+def test_faults_flags_uncataloged_site(tmp_path):
+    project = make_project(tmp_path, {
+        "docs/resilience.md": "| `swap.out` | spill |\n",
+        "src/repro/serve/mod.py": """\
+            def spill(self):
+                if self.faults is not None:
+                    self.faults.check("swap.out")
+                    self.faults.check("swap.mystery")   # FLT001
+            """,
+    })
+    found = run_passes(project, ["faults"])
+    assert rules(found) == ["FLT001"]
+    assert "swap.mystery" in found[0].message
+
+
+def test_faults_accepts_cataloged_and_computed_sites(tmp_path):
+    project = make_project(tmp_path, {
+        "docs/resilience.md": "| `dock.put` | row landing |\n",
+        "src/repro/core/mod.py": """\
+            def put(self, node):
+                self.faults.check("dock.put")
+                # computed family: documented as stage.<node>, not literal
+                self.faults.check("stage." + node.name)
+                faults = self.faults
+                faults.check("dock.put" if node.stream else "dock.put")
+                # .check on a non-faults receiver is not a fault site
+                self.dock.check("anything")
+            """,
+    })
+    assert run_passes(project, ["faults"]) == []
+
+
+# ---------------------------------------------------------------------------
 # baseline machinery
 # ---------------------------------------------------------------------------
 
@@ -385,13 +421,13 @@ def test_baseline_requires_reason(tmp_path):
 # the shipped tree honors its own contracts
 # ---------------------------------------------------------------------------
 
-def test_all_five_passes_are_registered():
-    assert sorted(PASSES) == ["determinism", "drift", "kernel-shapes",
-                              "locks", "tracer-overhead"]
+def test_all_six_passes_are_registered():
+    assert sorted(PASSES) == ["determinism", "drift", "faults",
+                              "kernel-shapes", "locks", "tracer-overhead"]
     owned = sorted(r for p in PASSES.values() for r in p.rule_ids)
-    assert owned == ["DET001", "DET002", "DRF001", "DRF002", "KRN001",
-                     "KRN002", "KRN003", "KRN004", "LOCK001", "LOCK002",
-                     "TRC001"]
+    assert owned == ["DET001", "DET002", "DRF001", "DRF002", "FLT001",
+                     "KRN001", "KRN002", "KRN003", "KRN004", "LOCK001",
+                     "LOCK002", "TRC001"]
 
 
 def test_shipped_tree_clean_under_shipped_baseline():

@@ -1,0 +1,548 @@
+"""Fault-injection & recovery layer (repro.resilience + the runtime hooks).
+
+The contracts under test:
+
+  * fault plans — ``FaultPlan`` is a deterministic, replayable schedule:
+    the spec string round-trips through parse/describe, ``check`` fires at
+    exactly the scheduled (site, hit) pairs, and randomized plans are a
+    pure function of their seed;
+  * stage retry — transient stage/dock failures are retried with capped
+    deterministic backoff and the recovered run is BIT-IDENTICAL to the
+    fault-free run (retry re-runs the whole stage from the fetch);
+  * quarantine — a stage that exhausts its retry budget drops exactly its
+    dispatch's samples; downstream barriers shrink so survivors still flow;
+  * swap-failure degradation — a swap-worker failure flips the engine to
+    recompute-preemption mode (tier detached, garbage swap-in blocks
+    preempted) instead of crashing, and greedy gen AND gen_logp stay
+    bitwise identical to a tier-off run;
+  * close() hygiene — a pending worker failure surfaces from ``close()``
+    (never silently joined away) and a join timeout is counted;
+  * checkpoint/resume — ``save_train_state``/``load_train_state`` replay
+    the remaining iterations bit-exactly, including partial-rollout
+    carryover, dock contents and every RNG cursor.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import RLConfig
+from repro.core.graph import GraphExecutor, RLGraph, StageNode
+from repro.core.transfer_dock import TransferDock
+from repro.data.prompts import PromptDataset, pattern_task
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.model import build_model
+from repro.resilience import (FatalFault, FaultPlan, FaultSpec, RetryPolicy,
+                              TransientError, TransientFault, call_with_retry)
+from repro.serve.engine import ServingEngine
+from repro.serve.host_tier import HostKVTier, SwapWorkerError
+
+TOK = ByteTokenizer()
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("yi-6b").replace(dtype="float32", remat=False)
+    m = build_model(cfg)
+    params = m.init(cfg, jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: deterministic, replayable schedules
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse_describe_roundtrip():
+    spec = "dock.put@3,stage.reward@1,stage.reward@4:fatal,swap.out@2"
+    plan = FaultPlan.parse(spec)
+    assert plan.describe() == spec
+    assert FaultPlan.parse(plan.describe()).describe() == spec
+
+
+def test_fault_plan_rejects_bad_specs():
+    with pytest.raises(ValueError):
+        FaultPlan.parse("no-at-sign")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("site@0")          # hits are 1-based
+    with pytest.raises(ValueError):
+        FaultSpec("site", 1, "weird")
+
+
+def test_fault_plan_fires_exactly_at_scheduled_hits():
+    plan = FaultPlan.parse("a@2,a@4:fatal,b@1")
+    plan.check("a")                        # hit 1: clean
+    with pytest.raises(TransientFault) as ti:
+        plan.check("a")                    # hit 2: scheduled transient
+    assert isinstance(ti.value, TransientError)
+    assert (ti.value.site, ti.value.hit) == ("a", 2)
+    plan.check("a")                        # hit 3: clean
+    with pytest.raises(FatalFault):
+        plan.check("a")                    # hit 4: scheduled fatal
+    with pytest.raises(TransientFault):
+        plan.check("b")
+    plan.check("c")                        # unscheduled site never fires
+    assert [s.describe() for s in plan.fired] == ["a@2", "a@4:fatal", "b@1"]
+    assert plan.counts() == {"a": 4, "b": 1, "c": 1}
+    plan.reset()
+    assert plan.counts() == {} and plan.fired == []
+    plan.check("a")
+    with pytest.raises(TransientFault):
+        plan.check("a")                    # same schedule replays after reset
+
+
+def test_random_plan_is_a_pure_function_of_seed():
+    sites = ["swap.out", "swap.in", "dock.put"]
+    a = FaultPlan.random_plan(3, sites, 5)
+    b = FaultPlan.random_plan(3, sites, 5)
+    c = FaultPlan.random_plan(4, sites, 5)
+    assert a.describe() == b.describe()
+    assert a.describe() != c.describe()
+    assert len(a.describe().split(",")) == 5
+
+
+# ---------------------------------------------------------------------------
+# retry policy
+# ---------------------------------------------------------------------------
+
+def test_backoff_is_deterministic_and_capped():
+    pol = RetryPolicy(max_retries=8, backoff_base_s=0.001, backoff_cap_s=0.05)
+    delays = [pol.backoff(i) for i in range(8)]
+    assert delays == [pol.backoff(i) for i in range(8)]   # pure
+    assert delays[0] == 0.001 and max(delays) == 0.05
+    assert all(d2 >= d1 for d1, d2 in zip(delays, delays[1:]))
+
+
+def test_call_with_retry_recovers_and_reports():
+    calls, notes = [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TransientFault("x", len(calls))
+        return "ok"
+
+    pol = RetryPolicy(max_retries=3, backoff_base_s=0.0, backoff_cap_s=0.0)
+    got = call_with_retry(flaky, pol,
+                          on_retry=lambda a, e: notes.append((a, e.site)))
+    assert got == "ok" and len(calls) == 3
+    assert notes == [(0, "x"), (1, "x")]
+
+
+def test_call_with_retry_exhausts_budget():
+    def always():
+        raise TransientFault("y", 1)
+
+    pol = RetryPolicy(max_retries=2, backoff_base_s=0.0, backoff_cap_s=0.0)
+    with pytest.raises(TransientFault):
+        call_with_retry(always, pol)
+    with pytest.raises(FatalFault):        # non-transient: never retried
+        call_with_retry(lambda: (_ for _ in ()).throw(FatalFault("z", 1)),
+                        pol)
+
+
+# ---------------------------------------------------------------------------
+# executor: retry bit-identity + quarantine (pure-numpy graph, no model)
+# ---------------------------------------------------------------------------
+
+def _tiny_graph(gate=None):
+    def double(ctx, io):
+        return {"x": io.ins["prompt"] * 2}
+
+    def total(ctx, io):
+        ctx.sums[tuple(io.idxs)] = io.ins["x"].sum()
+        return None
+
+    return RLGraph("tiny", [
+        StageNode("double", 0, inputs=("prompt",), outputs=("x",),
+                  fn=double, stream=True, gate=gate),
+        StageNode("total", 0, inputs=("x",), outputs=(), fn=total),
+    ])
+
+
+class _Ctx:
+    """Minimal executor ctx: the tiny graph has no layout edges, so the
+    resharder is never touched."""
+    resharder = None
+    rl = RLConfig(stage_fusion=False)
+
+    def __init__(self):
+        self.sums = {}
+
+
+def _run_tiny(faults=None, gate=None, node_retries=None):
+    graph = _tiny_graph(gate)
+    if node_retries is not None:
+        graph.nodes[0].max_retries = node_retries
+    dock = TransferDock(1, graph.states(), faults=faults)
+    ex = GraphExecutor(dock, _Ctx.rl, faults=faults,
+                       retry=RetryPolicy(max_retries=2, backoff_base_s=0.0,
+                                         backoff_cap_s=0.0))
+    ctx = _Ctx()
+    dock.put("prompt", list(range(4)), np.arange(4 * 3).reshape(4, 3),
+             src_node=0)
+    run = ex.run(graph, ctx, expected=4)
+    return run, ex, dock, ctx
+
+
+def test_executor_retries_transient_stage_faults_bit_identically():
+    _, _, base_dock, base_ctx = _run_tiny()
+    plan = FaultPlan.parse("stage.double@1,dock.put@2")
+    run, ex, dock, ctx = _run_tiny(faults=plan)
+    assert [s.describe() for s in plan.fired] == ["stage.double@1",
+                                                 "dock.put@2"]
+    assert run.retries == {"double": 2}    # one stage retry + one put retry
+    assert ex.metrics.value("graph.retry") == 2
+    assert not run.quarantined
+    # the recovered run's dock rows and downstream results are bit-identical
+    for idx in range(4):
+        np.testing.assert_array_equal(dock.get("total", "x", [idx], 0),
+                                      base_dock.get("total", "x", [idx], 0))
+    assert ctx.sums == base_ctx.sums
+
+
+def test_executor_quarantines_after_budget_and_shrinks_barriers():
+    # gate the stream node so its FIRST dispatch covers exactly {0, 1}; all
+    # three attempts of that dispatch fault -> quarantine; the second
+    # dispatch {2, 3} is clean and the downstream barrier (expected=4)
+    # shrinks to the 2 survivors instead of waiting forever
+    state = {"first": True}
+
+    def gate(ctx, idxs):
+        if state["first"] and len(idxs) >= 2:
+            state["first"] = False
+            return sorted(idxs)[:2]
+        return idxs
+
+    plan = FaultPlan.parse("stage.double@1,stage.double@2,stage.double@3")
+    run, ex, dock, ctx = _run_tiny(faults=plan, gate=gate)
+    assert run.quarantined == {"double": [0, 1]}
+    assert run.quarantined_idxs == {0, 1}
+    assert ex.metrics.value("graph.quarantined") == 2
+    assert list(ctx.sums) == [(2, 3)], "barrier must fire on the survivors"
+    arr = np.arange(12).reshape(4, 3)
+    assert ctx.sums[(2, 3)] == (arr[2:] * 2).sum()
+
+
+def test_per_node_retry_budget_overrides_executor_default():
+    # node budget 0: the first transient fault quarantines immediately even
+    # though the executor default would have retried it
+    plan = FaultPlan.parse("stage.double@1")
+    run, ex, _, _ = _run_tiny(faults=plan, node_retries=0)
+    assert run.retries == {}
+    assert run.quarantined == {"double": [0, 1, 2, 3]}
+
+
+# ---------------------------------------------------------------------------
+# swap engine close(): failures surface, timeouts are counted
+# ---------------------------------------------------------------------------
+
+def test_close_surfaces_pending_worker_failure(dense_setup):
+    """Regression: close() used to drain/join without re-checking the
+    worker's error slot — a failure in the final jobs vanished silently."""
+    cfg, _, _ = dense_setup
+    from repro.serve.paged_cache import prefix_key
+    plan = FaultPlan.parse("swap.out@1")
+    tier = HostKVTier(cfg, num_blocks=2, block_size=4, faults=plan)
+    shp = (cfg.num_layers, 4, cfg.num_kv_heads, cfg.head_dim)
+    k = v = np.zeros(shp, np.float32)
+    tier.put(prefix_key(b"", np.arange(4)), k, v)
+    with pytest.raises(SwapWorkerError, match="KV swap worker failed"):
+        tier.close()
+    assert plan.fired, "the injected spill fault never fired"
+
+
+def test_close_join_timeout_is_counted(dense_setup):
+    cfg, _, _ = dense_setup
+    tier = HostKVTier(cfg, num_blocks=2, block_size=4)
+    stuck = threading.Thread(target=lambda: time.sleep(2.0), daemon=True)
+    stuck.start()
+    tier.swap._thread = stuck              # simulate a wedged worker
+    tier.swap.close(timeout=0.05)
+    assert tier.metrics.value("serve.swap.close_timeout") == 1
+    assert tier.swap._thread is None
+
+
+def test_drain_handles_externally_killed_worker(dense_setup):
+    cfg, _, _ = dense_setup
+    tier = HostKVTier(cfg, num_blocks=2, block_size=4)
+    with tier.swap._cond:
+        tier.swap._pending = 1             # job lost: no worker ever ran it
+    with pytest.raises(SwapWorkerError):
+        tier.swap.drain()
+
+
+# ---------------------------------------------------------------------------
+# swap-failure degradation: bitwise-identical fallback to recompute
+# ---------------------------------------------------------------------------
+
+def _prompts(b, pl, seed=0):
+    return np.random.RandomState(seed).randint(0, 250, (b, pl)).astype(np.int32)
+
+
+def _sweep(cfg, params, host_blocks, faults=None):
+    """The host-tier bit-identity workload (tests/test_host_tier.py),
+    plus an optional fault plan and per-step invariant checks that stay
+    valid across mid-run degradation."""
+    pl, mn = 12, 10
+    pool = [p for p in _prompts(3, pl, seed=21)]
+    eng = ServingEngine(cfg, max_new=mn, eos_id=TOK.eos_id, pad_id=TOK.pad_id,
+                        greedy=True, max_slots=3, block_size=4, num_blocks=14,
+                        max_seq_len=pl + mn, host_tier_blocks=host_blocks,
+                        faults=faults)
+
+    def invariants():
+        # invariants hold after every step even while the tier degrades
+        # mid-run; the one tolerated wrinkle is a worker failure that fired
+        # AFTER this step's barrier — the tier is still attached, so
+        # check_consistent's drain re-raises it (the engine's next step
+        # resolves it into degradation)
+        try:
+            eng.sched.check_invariants()
+        except SwapWorkerError:
+            assert faults is not None
+
+    arrivals = [(0, 0), (0, 1), (1, 2), (2, 0), (3, 1), (3, 0), (5, 2),
+                (7, 1)]
+    outs, steps = [], 0
+    while arrivals or not eng.sched.idle:
+        while arrivals and arrivals[0][0] <= steps:
+            eng.submit(pool[arrivals.pop(0)[1]])
+        outs.extend(eng.step(params))
+        invariants()
+        steps += 1
+        assert steps < 500
+    budgets = [2, 5, 3, 4]
+    pending = set()
+    for i, bud in enumerate(budgets):
+        pending.add(eng.submit(pool[i % 3], max_new=mn, budget=bud))
+    rounds = 0
+    while pending:
+        finished, resum = eng.run_to_budget(params)
+        invariants()
+        for o in finished:
+            pending.discard(o.rid)
+            outs.append(o)
+        for req in resum:
+            pending.discard(req.rid)
+            pending.add(eng.submit(req.prompt, generated=req.generated,
+                                   max_new=mn - len(req.generated),
+                                   budget=budgets[rounds % 4]))
+        rounds += 1
+        assert rounds <= 16
+    stats = eng.stats()
+    degraded = eng._host_degraded
+    eng.close()
+    return outs, stats, degraded
+
+
+def _assert_bitwise_equal(a, b):
+    da = {o.rid: o for o in a}
+    db = {o.rid: o for o in b}
+    assert sorted(da) == sorted(db)
+    for rid in da:
+        np.testing.assert_array_equal(np.asarray(da[rid].gen),
+                                      np.asarray(db[rid].gen))
+        np.testing.assert_array_equal(da[rid].gen_logp, db[rid].gen_logp)
+
+
+def test_spill_failure_degrades_to_recompute_bit_identically(dense_setup):
+    """First spill job dies in the worker -> the engine drops the tier and
+    finishes the whole preemption-heavy workload on recompute, bitwise
+    equal to a tier-off run."""
+    cfg, _, params = dense_setup
+    off, off_stats, _ = _sweep(cfg, params, 0)
+    plan = FaultPlan.parse("swap.out@1")
+    on, on_stats, degraded = _sweep(cfg, params, 24, faults=plan)
+    assert plan.fired and degraded
+    assert on_stats["swap_degraded"] == 1
+    assert off_stats["preemptions"] > 0, "pool was never starved"
+    _assert_bitwise_equal(off, on)
+
+
+def test_swapin_failure_preempts_victims_and_degrades(dense_setup):
+    """A swap-in upload dies AFTER its target block was registered: the
+    engine must preempt the owner (garbage rows are never read) and still
+    produce bitwise tier-off outputs."""
+    cfg, _, params = dense_setup
+    off, _, _ = _sweep(cfg, params, 0)
+    plan = FaultPlan.parse("swap.in@2")
+    on, on_stats, degraded = _sweep(cfg, params, 24, faults=plan)
+    assert plan.fired and degraded
+    assert on_stats["swap_degraded"] == 1
+    assert on_stats["swap_in_blocks"] >= 2, "workload never reached the fault"
+    _assert_bitwise_equal(off, on)
+
+
+def test_randomized_fault_sweep_every_site(dense_setup):
+    """Satellite sweep: seeded random plans over BOTH swap sites, against
+    the preemption-heavy workload; whatever fires, invariants hold every
+    step and the final outputs are bitwise tier-off."""
+    cfg, _, params = dense_setup
+    off, _, _ = _sweep(cfg, params, 0)
+    fired_sites = set()
+    for seed in range(3):
+        plan = FaultPlan.random_plan(seed, ["swap.out", "swap.in"], 3,
+                                     max_hit=6)
+        on, on_stats, degraded = _sweep(cfg, params, 24, faults=plan)
+        _assert_bitwise_equal(off, on)
+        if plan.fired:
+            assert degraded and on_stats["swap_degraded"] == 1
+        fired_sites.update(s.site for s in plan.fired)
+    assert fired_sites, "no random plan ever fired — sweep is vacuous"
+
+
+# ---------------------------------------------------------------------------
+# trainer-level chaos + checkpoint/resume
+# ---------------------------------------------------------------------------
+
+def _trainer(faults=None, seed=3, partial=False, starve_blocks=0, **rl_over):
+    from repro.core.trainer import GRPOTrainer
+
+    cfg = get_smoke_config("yi-6b").replace(dtype="float32", remat=False)
+    rl_kw = dict(num_generations=2, max_prompt_len=12, max_response_len=8,
+                 rollout_engine="serving", serve_max_slots=4,
+                 serve_block_size=4, partial_rollout=partial)
+    rl_kw.update(rl_over)
+    rl = RLConfig(**rl_kw)
+    ds = PromptDataset(pattern_task(), max_prompt_len=rl.max_prompt_len,
+                       seed=seed)
+    if partial:
+        from repro.core.partial import PartialRolloutTrainer
+        tr = PartialRolloutTrainer(cfg, rl, ds, budget=5, num_nodes=2,
+                                   seed=seed, faults=faults)
+    else:
+        tr = GRPOTrainer(cfg, rl, ds, num_nodes=2, seed=seed, faults=faults)
+    if starve_blocks:
+        # shrink the device pool below the workload's live demand so the
+        # run preempts (and, with a host tier, spills) — the chaos tests
+        # need real swap traffic, not a comfortably sized pool
+        tr.actor.engine._num_blocks_req = starve_blocks
+    return tr
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree.leaves(tree)]
+
+
+def _assert_trees_equal(a, b):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_chaos_trainer_run_bit_identical_to_fault_free():
+    """THE acceptance chaos test: swap-worker death plus multiple transient
+    stage/dock faults across a 2-iteration serving run — every fault is
+    absorbed (retry or degradation) and the final policy weights are
+    bitwise identical to the fault-free run."""
+    kw = dict(seed=3, serve_host_tier_blocks=12, greedy=True,
+              starve_blocks=9)
+    base = _trainer(**kw)
+    for _ in range(2):
+        base.iteration(2)
+    assert base.actor.engine.stats()["swap_out_blocks"] > 0, \
+        "workload never spilled — the chaos run would fault nothing"
+    plan = FaultPlan.parse("swap.out@1,stage.ref_inference@1,"
+                           "stage.actor_inference@2,dock.put@2")
+    chaos = _trainer(faults=plan, **kw)
+    for _ in range(2):
+        chaos.iteration(2)
+    fired = {s.site for s in plan.fired}
+    assert "swap.out" in fired, "swap worker never died"
+    assert len([s for s in plan.fired if s.site.startswith("stage.")]) >= 2
+    assert chaos.actor.engine._host_degraded
+    assert chaos.executor.metrics.value("graph.retry") >= 2
+    assert not chaos.last_run.quarantined
+    _assert_trees_equal(base.params, chaos.params)
+    _assert_trees_equal(base.opt_state, chaos.opt_state)
+
+
+def test_trainer_quarantine_drops_batch_and_completes():
+    """Retry budget exhausted at a barrier stage: the iteration still
+    quiesces (no hang), the drop is reported, and the policy is untouched
+    because the update stage never saw a full batch."""
+    plan = FaultPlan.parse(",".join(f"stage.actor_inference@{h}"
+                                    for h in (1, 2, 3)))
+    tr = _trainer(faults=plan, rollout_engine="sync")
+    before = _leaves(tr.params)
+    tr.iteration(2)
+    run = tr.last_run
+    assert run.quarantined == {"actor_inference": [0, 1, 2, 3]}
+    assert run.quarantined_idxs == {0, 1, 2, 3}
+    assert tr.executor.metrics.value("graph.quarantined") == 4
+    for x, y in zip(before, _leaves(tr.params)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_fatal_fault_propagates_out_of_iteration():
+    plan = FaultPlan.parse("stage.actor_update@1:fatal")
+    tr = _trainer(faults=plan, rollout_engine="sync")
+    with pytest.raises(FatalFault):
+        tr.iteration(2)
+
+
+def test_checkpoint_resume_grpo_bit_exact(tmp_path):
+    from repro.checkpoint import (is_train_state, load_train_state,
+                                  save_train_state)
+    straight = _trainer(seed=5)
+    for _ in range(3):
+        straight.iteration(2)
+
+    half = _trainer(seed=5)
+    for _ in range(2):
+        half.iteration(2)
+    path = str(tmp_path / "state.npz")
+    save_train_state(path, half, iteration=2)
+    assert is_train_state(path)
+
+    resumed = _trainer(seed=5)
+    assert load_train_state(path, resumed) == 2
+    assert resumed.ref.params is resumed.ref_params, \
+        "reference worker must track the restored ref pytree"
+    resumed.iteration(2)
+    _assert_trees_equal(straight.params, resumed.params)
+    _assert_trees_equal(straight.opt_state, resumed.opt_state)
+    _assert_trees_equal(straight.ref_params, resumed.ref_params)
+    np.testing.assert_array_equal(np.asarray(straight.key),
+                                  np.asarray(resumed.key))
+
+
+def test_checkpoint_resume_partial_rollout_carryover(tmp_path):
+    """Partial rollout is the hard case: pending sequences, dock rows and
+    the persistent index counter all span iterations and must survive the
+    snapshot for the resumed run to replay bit-exactly."""
+    from repro.checkpoint import load_train_state, save_train_state
+    straight = _trainer(seed=5, partial=True)
+    for _ in range(3):
+        straight.iteration(2)
+
+    half = _trainer(seed=5, partial=True)
+    for _ in range(2):
+        half.iteration(2)
+    assert half.pending_partials > 0, \
+        "budget never suspended anything — the carryover case is vacuous"
+    path = str(tmp_path / "pstate.npz")
+    save_train_state(path, half, iteration=2)
+
+    resumed = _trainer(seed=5, partial=True)
+    assert load_train_state(path, resumed) == 2
+    assert sorted(resumed.partials) == sorted(half.partials)
+    assert resumed._next_idx == half._next_idx
+    resumed.iteration(2)
+    _assert_trees_equal(straight.params, resumed.params)
+    _assert_trees_equal(straight.opt_state, resumed.opt_state)
+    assert sorted(resumed.partials) == sorted(straight.partials)
+    for i in straight.partials:
+        assert resumed.partials[i].generated == straight.partials[i].generated
+
+
+def test_legacy_params_checkpoint_still_detected(tmp_path):
+    from repro.checkpoint import is_train_state, save_pytree
+    path = str(tmp_path / "legacy.npz")
+    save_pytree(path, {"w": np.zeros(3)}, step=1)
+    assert not is_train_state(path)
+    assert not is_train_state(str(tmp_path / "missing.npz"))

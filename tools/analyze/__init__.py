@@ -1,6 +1,6 @@
 """Contract-aware static analysis for this repo (``python -m tools.analyze``).
 
-Five passes over the source tree, each encoding an invariant the test
+Six passes over the source tree, each encoding an invariant the test
 suite can only probe dynamically:
 
 * ``determinism``     — DET001/DET002: no unordered-set iteration or
@@ -12,14 +12,17 @@ suite can only probe dynamically:
 * ``kernel-shapes``   — KRN001..KRN004: Pallas grid/BlockSpec agreement,
   docstring assumptions enforced in code, VMEM budget respected.
 * ``drift``           — DRF001/DRF002: RLConfig knobs reachable from
-  train.py/docs; emitted ``serve.*``/``dock.*`` names cataloged in
-  docs/observability.md.
+  train.py/docs; emitted ``serve.*``/``dock.*``/``graph.*`` names
+  cataloged in docs/observability.md.
+* ``faults``          — FLT001: injected fault-site names cataloged in
+  docs/resilience.md.
 
 See docs/analysis.md for the rule catalog and the baseline workflow.
 Importing this package registers all passes.
 """
 # registration imports: each pass module's @register call populates PASSES
-from tools.analyze import determinism, drift, kernels, locks, overhead  # noqa: F401
+from tools.analyze import (determinism, drift, faults, kernels,  # noqa: F401
+                           locks, overhead)
 from tools.analyze.core import (Finding, Project, apply_baseline,  # noqa: F401
                                 load_baseline, run_passes)
 

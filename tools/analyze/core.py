@@ -196,3 +196,14 @@ def self_attr_path(node: ast.AST) -> str | None:
     if dn and dn.startswith("self."):
         return dn[len("self."):]
     return None
+
+
+def literal_names(arg: ast.AST) -> list[str]:
+    """String constants a name argument can evaluate to (handles the
+    ``a if cond else b`` split-name idiom).  Non-literal names (f-strings,
+    concatenations) yield [] — callers document those families separately."""
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+        return [arg.value]
+    if isinstance(arg, ast.IfExp):
+        return literal_names(arg.body) + literal_names(arg.orelse)
+    return []

@@ -6,8 +6,9 @@ documented.
   construction) or mentioned by name in ``README.md``/``docs/*.md``.  A
   field neither place is a knob nobody can discover — the drift this
   repo actually accumulated before this pass existed (15 fields).
-* **DRF002** — every literal ``serve.*``/``dock.*`` name emitted through
-  the telemetry layer (``MetricsRegistry.inc/observe/set/set_max``,
+* **DRF002** — every literal ``serve.*``/``dock.*``/``graph.*`` name
+  emitted through the telemetry layer
+  (``MetricsRegistry.inc/observe/set/set_max``,
   ``Tracer.span/instant/counter``) must appear in
   ``docs/observability.md``, the single event/metric catalog.  This
   supersedes hand-maintained name lists: add a counter, and CI fails
@@ -24,11 +25,12 @@ from __future__ import annotations
 import ast
 import re
 
-from tools.analyze.core import Finding, Project, dotted_name, register
+from tools.analyze.core import (Finding, Project, dotted_name,
+                                literal_names, register)
 
 EMIT_METHODS = {"inc", "observe", "set", "set_max", "span", "instant",
                 "counter"}
-NAME_PREFIXES = ("serve.", "dock.")
+NAME_PREFIXES = ("serve.", "dock.", "graph.")
 
 
 def _rlconfig_fields(project: Project) -> list[tuple[str, int]]:
@@ -53,16 +55,6 @@ def _emitter_receiver(call: ast.Call) -> bool:
         return False
     last = recv.split(".")[-1]
     return ("tracer" in last or "metrics" in last or last in ("tr", "m"))
-
-
-def _literal_names(arg: ast.AST) -> list[str]:
-    """String constants an emission's name argument can evaluate to
-    (handles the `a if cond else b` split-counter idiom)."""
-    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
-        return [arg.value]
-    if isinstance(arg, ast.IfExp):
-        return _literal_names(arg.body) + _literal_names(arg.orelse)
-    return []
 
 
 @register("drift", ("DRF001", "DRF002"),
@@ -90,7 +82,7 @@ def run(project: Project) -> list[Finding]:
                     and node.func.attr in EMIT_METHODS
                     and _emitter_receiver(node)):
                 continue
-            for name in _literal_names(node.args[0]):
+            for name in literal_names(node.args[0]):
                 if not name.startswith(NAME_PREFIXES) or name in seen:
                     continue
                 seen.add(name)

@@ -1,0 +1,53 @@
+"""Fault-site catalog pass: chaos hooks stay documented.
+
+* **FLT001** — every literal fault-site name passed to a ``FaultPlan``
+  check (``<...>.faults.check("site")`` — any receiver whose dotted name
+  ends in ``faults``) must appear in ``docs/resilience.md``, the single
+  fault-site catalog.  A site the catalog does not list cannot be targeted
+  from ``--fault-plan`` by anyone who reads the docs, so the chaos surface
+  silently shrinks — the same drift DRF002 guards against for telemetry
+  names.
+
+Known limitation (same as DRF002's): computed site names are not literal
+and are skipped — ``"stage." + node.name`` (core/graph.py) is the one
+such family, documented in the catalog as ``stage.<node>``.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analyze.core import (Finding, Project, dotted_name,
+                                literal_names, register)
+
+
+def _faults_receiver(call: ast.Call) -> bool:
+    """True for ``<recv>.check(...)`` where recv names a fault plan —
+    ``self.faults``, ``plan.faults``, a bare ``faults`` local, ..."""
+    if not (isinstance(call.func, ast.Attribute)
+            and call.func.attr == "check"):
+        return False
+    recv = dotted_name(call.func.value)
+    return recv is not None and recv.split(".")[-1] == "faults"
+
+
+@register("faults", ("FLT001",),
+          "injected fault-site names cataloged in docs/resilience.md")
+def run(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    catalog = project.read_text("docs/resilience.md")
+    seen: set[str] = set()
+    for mod in project.modules("src/repro"):
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and node.args
+                    and _faults_receiver(node)):
+                continue
+            for name in literal_names(node.args[0]):
+                if name in seen:
+                    continue
+                seen.add(name)
+                if name not in catalog:
+                    findings.append(Finding(
+                        mod.rel, node.lineno, "FLT001",
+                        f"fault site `{name}` is missing from the "
+                        f"docs/resilience.md catalog"))
+    return findings

@@ -46,6 +46,7 @@ REQUIRED_DOCS = [
     "docs/ARCHITECTURE.md",
     "docs/observability.md",
     "docs/analysis.md",
+    "docs/resilience.md",              # FLT001's fault-site catalog
 ]
 
 
