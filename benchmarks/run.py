@@ -6,6 +6,7 @@
   Figure 10-> bench_reshard_memory (allgather-swap memory release)
   kernels  -> bench_kernels        (fused-kernel micro-benchmarks)
   serving  -> bench_serving        (sync vs continuous-batching generation)
+  sampling -> bench_sampling       (deterministic-sampling replay A/B)
   swap     -> bench_swap           (host-tier KV swap vs recompute preemption)
   Table 2  -> bench_partial_stream (partial rollout streams mid-drain)
   Fig. 11  -> bench_moe_scale      (400B-class MoE at production scale)
@@ -26,7 +27,8 @@ import os
 import time
 
 SECTIONS = ["dispatch", "linearity", "reshard_memory", "kernels", "e2e",
-            "serving", "swap", "partial_stream", "moe_scale", "roofline"]
+            "serving", "sampling", "swap", "partial_stream", "moe_scale",
+            "roofline"]
 
 
 def main() -> None:

@@ -107,12 +107,13 @@ def save_train_state(path: str, trainer, *, iteration: int) -> None:
         "plen": int(getattr(trainer, "_plen", 0)),
     }
 
-    # serving-engine cursor state (sampling key + request-id counter) — the
-    # sync rollout engine is stateless between iterations
-    eng = trainer.actor.engine
+    # serving-engine cursor state: only the request-id counter (it feeds
+    # default per-request stream seeds).  Sampling keys are counter-derived
+    # from the static run key — rebuilt from config at construction — so
+    # there is no mutable key state to snapshot; the sync rollout engine is
+    # stateless between iterations either way.
     if trainer.actor.engine_kind == "serving":
-        arrays["serve_key"] = np.asarray(jax.device_get(eng._key))
-        meta["serve_next_rid"] = int(eng._next_rid)
+        meta["serve_next_rid"] = int(trainer.actor.engine._next_rid)
 
     # transfer dock — rows plus readiness/consumed metadata.  For trainers
     # that clear the dock each iteration this is empty at a boundary; for
@@ -176,10 +177,8 @@ def load_train_state(path: str, trainer) -> int:
     if meta.get("plen"):
         trainer._plen = int(meta["plen"])
 
-    eng = trainer.actor.engine
-    if trainer.actor.engine_kind == "serving" and "serve_key" in data:
-        eng._key = jnp.asarray(data["serve_key"], dtype=eng._key.dtype)
-        eng._next_rid = int(meta.get("serve_next_rid", 0))
+    if trainer.actor.engine_kind == "serving" and "serve_next_rid" in meta:
+        trainer.actor.engine._next_rid = int(meta["serve_next_rid"])
 
     dock = trainer.dock
     dock.clear()

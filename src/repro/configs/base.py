@@ -133,6 +133,17 @@ class RLConfig:
     #                                  blocks spill to host and preempted/
     #                                  suspended requests swap their KV
     #                                  back in instead of re-prefilling
+    serve_sampling_seed: int = 0     # run key for counter-based per-request
+    #                                  sampling streams: request `seed`
+    #                                  samples token t with
+    #                                  fold_in(fold_in(PRNGKey(this), seed),
+    #                                  t) — replayable, schedule-independent
+    serve_top_p: float = 1.0         # nucleus sampling mass (1.0 = off);
+    #                                  fused into the jitted decode step
+    serve_top_k: int = 0             # top-k truncation (0 = off); both
+    #                                  knobs apply to sync AND serving
+    #                                  engines (the sampled bit-identity
+    #                                  contract requires shared parameters)
     # --- dataflow (the paper's contribution) ---
     use_transfer_dock: bool = True   # False => centralized replay buffer baseline
     num_warehouses: int = 4          # S, usually = #nodes

@@ -2,12 +2,19 @@
 
 Batched synchronized decode: one jitted prefill over the padded prompts, then
 a host loop of jitted single-token steps with donated cache (in-place on
-device).  Sampling is temperature/greedy with per-sequence EOS stopping.
-Every sequence in the batch decodes until the SLOWEST finishes — the
-request-level continuous-batching engine (``repro.serve``, the vLLM-Ascend
-analogue) exists to remove exactly that barrier, and under greedy decoding
-it must reproduce this engine's outputs BIT-for-bit, which makes this the
-serving subsystem's correctness oracle.
+device).  Every sequence in the batch decodes until the SLOWEST finishes —
+the request-level continuous-batching engine (``repro.serve``, the
+vLLM-Ascend analogue) exists to remove exactly that barrier, and it must
+reproduce this engine's outputs BIT-for-bit, which makes this the serving
+subsystem's correctness oracle.
+
+Sampling is COUNTER-BASED per sequence: token ``t`` of row ``i`` is drawn
+with ``fold_in(fold_in(key, i), t)`` (``request_stream`` + ``token_keys``),
+never from an engine-wide key chain — so a sequence's sampled tokens are a
+pure function of (params, prompt, stream, t), independent of batch
+composition or how the serving engine schedules it.  The serving engine
+derives the SAME streams (rid ↔ row index), which is what extends the
+greedy bit-identity contract to temperature/top-p/top-k sampling.
 
 The engine operates on whatever weight layout ``core/resharding.py`` produced
 for the generation stage — weights and cache are never copied host-side here.
@@ -33,18 +40,93 @@ class RolloutResult:
     lengths: np.ndarray         # (B,) #generated tokens (incl. EOS)
 
 
+def request_stream(base_key, seed: int):
+    """Root key of one request's sampling stream: ``fold_in(base_key, seed)``.
+
+    THE stream derivation — both engines route through here so that a
+    request keyed by the same (base_key, seed) samples the same tokens in
+    either engine, under any schedule.  ``seed`` is the request's stable
+    identity: the sync engine uses the batch row index, the serving engine
+    uses the request id (or an explicit ``submit(seed=...)``)."""
+    return jax.random.fold_in(base_key, seed)
+
+
+def token_keys(streams, t):
+    """Per-row sampling keys for token index ``t`` of each stream.
+
+    streams: (B, 2) uint32 stream roots; t: scalar or (B,) int32 token
+    index (the count of tokens generated before this one).  Vectorized
+    ``fold_in`` — row ``i`` gets exactly the bits a standalone
+    ``fold_in(streams[i], t[i])`` produces, so the result is independent
+    of which other rows share the batch."""
+    streams = jnp.asarray(streams)
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (streams.shape[0],))
+    return jax.vmap(jax.random.fold_in)(streams, t)
+
+
+def truncate_logits(logits, *, top_p: float = 1.0, top_k: int = 0):
+    """Fused top-k/top-p (nucleus) truncation: logits outside the kept set
+    become ``-inf`` so a downstream categorical renormalizes over exactly
+    the survivors.  ``top_p=1.0`` and ``top_k=0`` are no-ops (the input is
+    returned untouched — bit-exact plain temperature sampling).
+
+    Deterministic tie-breaking: candidates are ranked by one STABLE
+    descending sort, so equal logits rank lower-token-id first, and both
+    cutoffs (rank < top_k; exclusive cumulative mass < top_p, computed
+    after the top-k mask renormalizes) cut on that same ranking.  The
+    top-p set is the smallest prefix whose mass reaches ``top_p`` (rank 0
+    always survives)."""
+    if top_p >= 1.0 and top_k <= 0:
+        return logits
+    if not 0.0 < top_p <= 1.0:
+        raise ValueError(f"top_p must be in (0, 1], got {top_p}")
+    if top_k < 0:
+        raise ValueError(f"top_k must be >= 0, got {top_k}")
+    order = jnp.argsort(-logits, axis=-1, stable=True)   # desc, ties by id
+    ranked = jnp.take_along_axis(logits, order, axis=-1)
+    keep = jnp.ones(ranked.shape, bool)
+    if top_k > 0:
+        keep &= jnp.arange(ranked.shape[-1]) < top_k
+        ranked = jnp.where(keep, ranked, -jnp.inf)
+    if top_p < 1.0:
+        probs = jax.nn.softmax(ranked, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        keep &= (cum - probs) < top_p          # exclusive mass below cutoff
+    inv = jnp.argsort(order, axis=-1, stable=True)
+    keep = jnp.take_along_axis(keep, inv, axis=-1)
+    return jnp.where(keep, logits, -jnp.inf)
+
+
 def sample_tokens(logits, key, *, temperature: float, greedy: bool,
-                  done=None, pad_id: int = 0):
+                  top_p: float = 1.0, top_k: int = 0, done=None,
+                  pad_id: int = 0):
     """THE sampling arithmetic — every generation engine (sync rollout and
     serve.ServingEngine) must route through here: the serving engine's
     bit-compatibility contract with this engine holds only while the two
-    sample identically.  Returns (next_token int32, its logp)."""
+    sample identically.  Returns (next_token int32, its logp).
+
+    ``key`` is either one key (2,) shared across the batch (legacy) or a
+    (B, 2) batch of PER-ROW keys (``token_keys``); with per-row keys, row
+    ``i``'s draw depends only on (key[i], logits[i]) — batch-composition
+    independent, the property the serving invariance contract rests on.
+    ``top_p``/``top_k`` truncate the candidate set (``truncate_logits``)
+    before the draw; the returned logp is always the token's logp under
+    the UN-truncated temperature-scaled distribution — the policy logp RL
+    importance ratios need — so truncation changes which token is drawn,
+    never how a drawn token is scored.  ``greedy=True`` ignores key and
+    truncation entirely (argmax; the degenerate case all pre-sampling
+    bitwise contracts pin)."""
     logits = logits / max(temperature, 1e-6)
     logp_all = jax.nn.log_softmax(logits, axis=-1)
     if greedy:
         nxt = jnp.argmax(logits, axis=-1)
     else:
-        nxt = jax.random.categorical(key, logits, axis=-1)
+        filt = truncate_logits(logits, top_p=top_p, top_k=top_k)
+        key = jnp.asarray(key)
+        if key.ndim == 2:                  # per-row streams
+            nxt = jax.vmap(jax.random.categorical)(key, filt)
+        else:
+            nxt = jax.random.categorical(key, filt, axis=-1)
     lp = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
     if done is not None:
         nxt = jnp.where(done, pad_id, nxt)
@@ -52,9 +134,31 @@ def sample_tokens(logits, key, *, temperature: float, greedy: bool,
     return nxt.astype(jnp.int32), lp
 
 
+@functools.lru_cache(maxsize=32)
+def sampled_drawer(temperature: float, top_p: float, top_k: int,
+                   pad_id: int):
+    """THE shared sampled-token drawer: one jitted
+    ``(logits, streams, t, done) -> (token, logp)`` callable per sampling
+    configuration, used by EVERY engine in the process.  Routing both the
+    sync and the serving engine through the SAME compiled function (on
+    logits they each computed bitwise-equally) is what makes sampled
+    tokens AND their logp bitwise equal across engines: were the draw
+    fused into each engine's own step jit, XLA could reassociate the
+    ``log_softmax`` reduction differently per graph and drift the logp by
+    ulps.  ``done`` rows draw pad/0.0 (idle serving slots, finished sync
+    rows); first-token callers pass all-False."""
+    def fn(logits, streams, t, done):
+        return sample_tokens(logits, token_keys(streams, t),
+                             temperature=temperature, greedy=False,
+                             top_p=top_p, top_k=top_k, done=done,
+                             pad_id=pad_id)
+    return jax.jit(fn)
+
+
 class RolloutEngine:
     def __init__(self, cfg: ModelConfig, *, max_new: int, eos_id: int,
-                 pad_id: int, temperature: float = 1.0, greedy: bool = False):
+                 pad_id: int, temperature: float = 1.0, greedy: bool = False,
+                 top_p: float = 1.0, top_k: int = 0):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.max_new = max_new
@@ -62,25 +166,44 @@ class RolloutEngine:
         self.pad_id = pad_id
         self.temperature = temperature
         self.greedy = greedy
+        self.top_p = top_p
+        self.top_k = top_k
         self._prefill = jax.jit(self._prefill_impl)
+        # greedy keeps sampling FUSED into the step jit (the pre-streams
+        # graph — argmax consumes no key, so the stream args trace away and
+        # existing greedy bit-contracts are untouched); sampled mode steps
+        # to logits only and draws through the process-shared drawer
         self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._draw = (None if greedy else
+                      sampled_drawer(temperature, top_p, top_k, pad_id))
 
     # -- jitted pieces ------------------------------------------------------
     def _prefill_impl(self, params, batch, cache):
         return self.model.prefill(params, self.cfg, batch, cache)
 
-    def _step_impl(self, params, cache, tok, pos, key, done):
+    def _step_impl(self, params, cache, tok, pos, done):
+        """Greedy fused step: decode + argmax + done fold in one graph."""
         logits, cache = self.model.decode(params, self.cfg, cache, tok, pos)
-        nxt, lp = sample_tokens(logits, key, temperature=self.temperature,
-                                greedy=self.greedy, done=done,
-                                pad_id=self.pad_id)
+        nxt, lp = sample_tokens(logits, None, temperature=self.temperature,
+                                greedy=True, done=done, pad_id=self.pad_id)
         done = done | (nxt == self.eos_id)
         return cache, nxt, lp, done
+
+    def _decode_impl(self, params, cache, tok, pos):
+        """Sampled-mode step: logits only — the draw happens in the shared
+        ``sampled_drawer`` so it is bitwise engine-independent."""
+        return self.model.decode(params, self.cfg, cache, tok, pos)
 
     # -- public API ---------------------------------------------------------
     def generate(self, params, prompts: np.ndarray, key,
                  extras: dict | None = None) -> RolloutResult:
-        """prompts: (B, PL) int32 padded.  Synchronized batch decode."""
+        """prompts: (B, PL) int32 padded.  Synchronized batch decode.
+
+        ``key`` is consumed as the RUN key only: row ``i`` samples token
+        ``t`` with ``fold_in(fold_in(key, i), t)``, so each row's token
+        sequence is independent of every other row (and replayable by the
+        serving engine from the same key)."""
         cfg = self.cfg
         b, pl = prompts.shape
         cap = pl + self.max_new
@@ -90,17 +213,28 @@ class RolloutEngine:
             batch.update(extras)
         logits, cache = self._prefill(params, batch, cache)
 
-        key, k0 = jax.random.split(key)
-        tok, lp = sample_tokens(logits, k0, temperature=self.temperature,
-                                greedy=self.greedy)
+        streams = jax.vmap(lambda i: request_stream(key, i))(jnp.arange(b))
+        nodone = jnp.zeros((b,), bool)
+        if self.greedy:
+            tok, lp = sample_tokens(logits, None,
+                                    temperature=self.temperature, greedy=True)
+        else:
+            tok, lp = self._draw(logits, streams, jnp.zeros((b,), jnp.int32),
+                                 nodone)
         done = tok == self.eos_id
         toks = [np.asarray(tok, np.int32)]
         lps = [np.asarray(lp, np.float32)]
 
         for t in range(1, self.max_new):
-            key, k = jax.random.split(key)
-            cache, tok, lp, done = self._step(
-                params, cache, tok[:, None], jnp.int32(pl + t - 1), k, done)
+            if self.greedy:
+                cache, tok, lp, done = self._step(
+                    params, cache, tok[:, None], jnp.int32(pl + t - 1), done)
+            else:
+                logits, cache = self._decode(params, cache, tok[:, None],
+                                             jnp.int32(pl + t - 1))
+                tok, lp = self._draw(logits, streams,
+                                     jnp.full((b,), t, jnp.int32), done)
+                done = done | (tok == self.eos_id)
             toks.append(np.asarray(tok, np.int32))
             lps.append(np.asarray(lp, np.float32))
             if bool(np.all(np.asarray(done))):
@@ -126,6 +260,7 @@ class RolloutEngine:
 
 
 @functools.lru_cache(maxsize=8)
-def _engine_cache(cfg, max_new, eos, pad, temp, greedy):
+def _engine_cache(cfg, max_new, eos, pad, temp, greedy, top_p=1.0, top_k=0):
     return RolloutEngine(cfg, max_new=max_new, eos_id=eos, pad_id=pad,
-                         temperature=temp, greedy=greedy)
+                         temperature=temp, greedy=greedy, top_p=top_p,
+                         top_k=top_k)

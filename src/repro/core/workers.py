@@ -35,6 +35,9 @@ class ActorWorker:
                 cfg, max_new=rl.max_response_len, eos_id=eos_id,
                 pad_id=pad_id, temperature=rl.temperature,
                 greedy=getattr(rl, "greedy", False),
+                top_p=getattr(rl, "serve_top_p", 1.0),
+                top_k=getattr(rl, "serve_top_k", 0),
+                seed=getattr(rl, "serve_sampling_seed", 0),
                 max_slots=rl.serve_max_slots,
                 block_size=rl.serve_block_size,
                 prefix_cache=getattr(rl, "serve_prefix_cache", True),
@@ -42,10 +45,15 @@ class ActorWorker:
                 host_tier_blocks=getattr(rl, "serve_host_tier_blocks", 0),
                 tracer=tracer, faults=faults)
         elif self.engine_kind == "sync":
+            # same truncation knobs: sampled serving ≡ sampled sync is a
+            # bitwise contract (tests/test_sampled_serving.py), so the two
+            # engines must share every sampling parameter
             self.engine = RolloutEngine(
                 cfg, max_new=rl.max_response_len, eos_id=eos_id,
                 pad_id=pad_id, temperature=rl.temperature,
-                greedy=getattr(rl, "greedy", False))
+                greedy=getattr(rl, "greedy", False),
+                top_p=getattr(rl, "serve_top_p", 1.0),
+                top_k=getattr(rl, "serve_top_k", 0))
         else:
             raise ValueError(f"unknown rollout engine {self.engine_kind!r}; "
                              f"expected 'sync' or 'serving'")
@@ -72,10 +80,12 @@ class ActorWorker:
     # budget, and run_to_budget hands unfinished ones back resumable.  The
     # engine's prefix cache makes a same-weights resume re-prefill nearly
     # free (suspended blocks stay indexed until reclaimed).
-    def submit(self, prompt, *, max_new=None, budget=None, generated=None):
+    def submit(self, prompt, *, max_new=None, budget=None, generated=None,
+               seed=None, priority=0):
         self._require_serving("submit")
         return self.engine.submit(prompt, max_new=max_new, budget=budget,
-                                  generated=generated)
+                                  generated=generated, seed=seed,
+                                  priority=priority)
 
     def run_to_budget(self, gen_params, on_finish=None):
         self._require_serving("run_to_budget")

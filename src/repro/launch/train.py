@@ -65,6 +65,16 @@ def main() -> None:
                     help="host-RAM KV tier capacity in blocks (0 = off): "
                     "preempted/suspended KV swaps to host and back instead "
                     "of being recomputed")
+    ap.add_argument("--serve-sampling-seed", type=int, default=0,
+                    help="run key for counter-based per-request sampling "
+                    "streams (serve_sampling_seed): same seed => bitwise "
+                    "replayable rollouts, independent of scheduling")
+    ap.add_argument("--serve-top-p", type=float, default=1.0,
+                    help="nucleus sampling mass, fused into the decode "
+                    "step (serve_top_p; 1.0 = off; both engines)")
+    ap.add_argument("--serve-top-k", type=int, default=0,
+                    help="top-k truncation before sampling (serve_top_k; "
+                    "0 = off; both engines)")
     ap.add_argument("--rollout-budget", type=int, default=8,
                     help="tokens per sequence per iteration "
                          "(--partial-rollout)")
@@ -130,6 +140,9 @@ def main() -> None:
         serve_prefix_cache=not args.no_prefix_cache,
         serve_prefill_chunk=args.prefill_chunk,
         serve_host_tier_blocks=args.host_tier_blocks,
+        serve_sampling_seed=args.serve_sampling_seed,
+        serve_top_p=args.serve_top_p,
+        serve_top_k=args.serve_top_k,
     )
     if args.rollout_engine:
         rl = rl.replace(rollout_engine=args.rollout_engine)

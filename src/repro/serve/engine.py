@@ -64,7 +64,20 @@ config); past that the continuation chunk's online-softmax block
 partition differs from whole-prompt prefill's, logits agree to allclose
 rather than bitwise, and greedy equality is token-level in practice — the
 same caveat the PR-4 bucketed admission prefill already carried versus
-the sync engine.  The tier-on/off leg additionally rests on three rules:
+the sync engine.
+
+SAMPLED decoding carries the same contract, because sampling is
+COUNTER-BASED per request: ``submit`` derives each request's stream root
+``fold_in(run_key, seed)`` (seed defaults to the rid) and token ``t`` is
+drawn with ``fold_in(stream, t)`` — never from an engine-wide key chain —
+so a request's sampled tokens are a pure function of (params, prompt,
+stream, t), bitwise invariant to admission order, pool size, chunking,
+preemption/refill, budget suspend/resume and the host tier, and equal to
+the sync ``RolloutEngine`` wherever the logits themselves are bit-equal
+(the flash kv-block scope above).  ``docs/serving.md`` § "Deterministic
+sampling" states the full replay contract.
+
+The tier-on/off leg additionally rests on three rules:
 only prefill-provenance blocks spill (``PagedKVCache.mark_decode_write``),
 a match chain never continues through device blocks after a host hit
 (``Scheduler._match``), and swap-in registration lands at admission like
@@ -81,7 +94,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.rollout import RolloutResult, sample_tokens
+from repro.core.rollout import (RolloutResult, request_stream, sample_tokens,
+                                sampled_drawer)
 from repro.models.model import build_model
 from repro.obs import MetricsRegistry, get_tracer
 from repro.serve.host_tier import HostKVTier, SwapWorkerError
@@ -121,6 +135,7 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, *, max_new: int, eos_id: int,
                  pad_id: int, temperature: float = 1.0, greedy: bool = False,
+                 top_p: float = 1.0, top_k: int = 0,
                  max_slots: int = 8, block_size: int = 16,
                  max_seq_len: int | None = None, num_blocks: int | None = None,
                  prefix_cache: bool = True, prefill_chunk: int | None = None,
@@ -142,6 +157,12 @@ class ServingEngine:
         self.pad_id = pad_id
         self.temperature = temperature
         self.greedy = greedy
+        if not 0.0 < top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {top_p}")
+        if top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {top_k}")
+        self.top_p = top_p
+        self.top_k = top_k
         self.max_slots = max_slots
         self.block_size = block_size
         self.prefix_cache = prefix_cache
@@ -157,7 +178,12 @@ class ServingEngine:
         self._num_blocks_req = num_blocks
         self.cache: PagedKVCache | None = None
         self.sched: Scheduler | None = None
-        self._key = jax.random.PRNGKey(seed)
+        # run key for counter-based per-request sampling streams: NEVER
+        # split/advanced (that was the old engine-wide key chain, whose
+        # sequencing leaked scheduling into every request's samples) — each
+        # request derives fold_in(run_key, seed) at submit and owns its
+        # stream from then on
+        self._run_key = jax.random.PRNGKey(seed)
         self._next_rid = 0
         self._on_finish = None
         self._resumable: list[Request] = []  # budget-exhausted, slot freed
@@ -194,6 +220,12 @@ class ServingEngine:
         self._sample = jax.jit(self._sample_impl)
         self._step = jax.jit(self._step_impl, donate_argnums=(1, 2))
         self._write = jax.jit(scatter_prefill, donate_argnums=(0,))
+        # sampled draws go through the PROCESS-SHARED drawer (one compiled
+        # function per sampling config, the same object RolloutEngine uses)
+        # — engine-local jits could fuse the log_softmax differently and
+        # drift logp by ulps, breaking the cross-engine bitwise contract
+        self._draw = (None if greedy else
+                      sampled_drawer(temperature, top_p, top_k, pad_id))
 
     # ------------------------------------------------------------------
     # state
@@ -281,6 +313,9 @@ class ServingEngine:
             "shared_prefill_tokens": m.value("serve.shared_prefill_tokens"),
             "readmit_prefill_tokens": m.value("serve.readmit_prefill_tokens"),
             "decode_tokens": m.value("serve.decode_tokens"),
+            "sampled_requests": m.value("serve.sampled.requests"),
+            "sampled_tokens": m.value("serve.sampled.tokens"),
+            "priority_bypass": m.value("serve.priority.bypass"),
             "max_step_prefill": int(m.value("serve.max_step_prefill")),
             "swap_out_blocks": m.value("serve.swap.out_blocks"),
             "swap_out_bytes": m.value("serve.swap.out_bytes"),
@@ -306,10 +341,12 @@ class ServingEngine:
         cache = self.model.init_cache(self.cfg, b, s)
         return self.model.prefill(params, self.cfg, batch, cache, last=last)
 
-    def _sample_impl(self, logits, key):
-        """First-token sampling — shared arithmetic with RolloutEngine."""
-        return sample_tokens(logits, key, temperature=self.temperature,
-                             greedy=self.greedy)
+    def _sample_impl(self, logits):
+        """GREEDY first-token sampling (argmax consumes no key; the graph is
+        the pre-streams one, keeping greedy bit-contracts untouched).
+        Sampled engines draw first tokens through ``self._draw`` instead."""
+        return sample_tokens(logits, None, temperature=self.temperature,
+                             greedy=True)
 
     def _chunk_impl(self, params, pool_k, pool_v, table, chunk, start, last):
         """One continuation-prefill chunk for one slot (see
@@ -319,11 +356,19 @@ class ServingEngine:
                                         table, chunk, start,
                                         block_size=self.block_size, last=last)
 
-    def _step_impl(self, params, pool_k, pool_v, tables, tok, pos, done, key):
+    def _step_impl(self, params, pool_k, pool_v, tables, tok, pos, done):
         """One continuous-batching decode step over the full slot batch.
 
         tables: (S, MB) int32; tok: (S, 1); pos: (S,) — per-slot write
         position (= current cache length); done: (S,) True on idle slots.
+        GREEDY engines sample fused in this graph (argmax — the pre-streams
+        graph, so greedy bit-contracts are untouched) and return
+        ``(pool_k, pool_v, nxt, lp)``.  SAMPLED engines return
+        ``(pool_k, pool_v, logits)``: the draw happens in the
+        process-shared ``sampled_drawer`` with each slot's stream root and
+        token count, so slot s's token depends only on its OWN stream and
+        logits, never on which other requests share the step — and the
+        draw compiles identically to the sync engine's.
 
         TRUE paged decode: attention reads the block tables directly
         (kernels/paged_attention.py + kernels/ref.py) and the model returns
@@ -341,16 +386,20 @@ class ServingEngine:
                 + pos % self.block_size)            # (S,) — idle -> null block
         pool_k = scatter_token(pool_k, new_k, flat)
         pool_v = scatter_token(pool_v, new_v, flat)
-        nxt, lp = sample_tokens(logits, key, temperature=self.temperature,
-                                greedy=self.greedy, done=done,
-                                pad_id=self.pad_id)
-        return pool_k, pool_v, nxt, lp
+        if self.greedy:
+            nxt, lp = sample_tokens(logits, None,
+                                    temperature=self.temperature,
+                                    greedy=True, done=done,
+                                    pad_id=self.pad_id)
+            return pool_k, pool_v, nxt, lp
+        return pool_k, pool_v, logits
 
     # ------------------------------------------------------------------
     # online API
     # ------------------------------------------------------------------
     def submit(self, prompt, *, max_new: int | None = None,
-               budget: int | None = None, generated=None) -> int:
+               budget: int | None = None, generated=None,
+               seed: int | None = None, priority: int = 0) -> int:
         """Queue one request.  Returns its engine-assigned request id.
 
         ``max_new`` caps the NEW tokens this submission may emit (defaults to
@@ -360,6 +409,17 @@ class ServingEngine:
         recompute preemption does.  ``budget`` (≤ max_new to matter) makes
         the request SUSPEND resumable after that many new tokens — collect
         it from ``run_to_budget``.
+
+        ``seed`` names the request's SAMPLING STREAM: token ``t`` is drawn
+        with ``fold_in(fold_in(run_key, seed), t)`` where ``t`` counts all
+        generated tokens including the mid-sequence seed, so resubmitting a
+        suspension with the SAME ``seed`` continues its stream exactly.
+        Defaults to the request id — distinct per submission, replayable on
+        a fresh engine built with the same engine ``seed`` because rids are
+        assigned in submission order.  ``priority`` picks the admission/
+        preemption class (higher runs first, evicted last; FIFO within a
+        class, starvation-bounded — see serve/scheduler.AdmissionQueue);
+        it never changes what any request GENERATES, only when.
 
         Admission prefill is BUCKETED: prompts are right-padded to the next
         power-of-2 length (causally inert) so varied-length online traffic
@@ -371,19 +431,45 @@ class ServingEngine:
             raise ValueError(f"max_new must be >= 1, got {max_new}")
         if budget is not None and budget < 1:
             raise ValueError(f"budget must be >= 1, got {budget}")
-        seed = [int(t) for t in generated] if generated is not None else []
-        self._ensure_state(len(prompt) + len(seed) + max_new)
+        gen = [int(t) for t in generated] if generated is not None else []
+        self._ensure_state(len(prompt) + len(gen) + max_new)
         rid = self._next_rid
         self._next_rid += 1
+        if seed is None:
+            seed = rid
+        # greedy decoding never consumes a key — skip the stream derivation
+        # so the greedy hot path stays dispatch-free at submit
+        stream = (None if self.greedy else
+                  np.asarray(request_stream(self._run_key, seed), np.uint32))
         # seeded tokens carry no engine-side logp (they were sampled in an
         # earlier run, possibly under different weights) — pad with zeros to
         # keep generated/gen_logp aligned
         self.sched.submit(Request(rid=rid, prompt=prompt, max_new=max_new,
-                                  budget=budget, generated=seed,
-                                  gen_logp=[0.0] * len(seed),
-                                  resume_base=len(seed)))
+                                  budget=budget, priority=priority,
+                                  seed=seed, stream=stream, generated=gen,
+                                  gen_logp=[0.0] * len(gen),
+                                  resume_base=len(gen)))
         self.metrics.inc("serve.submitted")
+        if not self.greedy:
+            self.metrics.inc("serve.sampled.requests")
         return rid
+
+    def _first_sample(self, logits, req: Request) -> tuple[int, float]:
+        """Draw ``req``'s next token from its (1, V) admission-prefill
+        logits.  Sampled requests go through the process-shared drawer with
+        key ``fold_in(stream, t)``, ``t`` = tokens already generated
+        (mid-sequence seed included) — bitwise the draw the decode step
+        would make for this request at the same logits, so admission-time
+        first-token sampling and decode sampling are one stream arithmetic.
+        Greedy requests use the engine's fused greedy sampler."""
+        if req.stream is None:
+            t0, l0 = self._sample(logits)
+        else:
+            t0, l0 = self._draw(
+                logits, jnp.asarray(req.stream)[None],
+                jnp.full((1,), len(req.generated), jnp.int32),
+                jnp.zeros((1,), bool))
+        return int(t0[0]), float(l0[0])
 
     def flush_prefix(self) -> None:
         """Drop every cached prefix now — BOTH tiers (the host tier flushes
@@ -485,6 +571,8 @@ class ServingEngine:
         tok = np.full((s, 1), self.pad_id, np.int32)
         pos = np.zeros((s,), np.int32)
         done = np.ones((s,), bool)
+        streams = np.zeros((s, 2), np.uint32)   # idle/greedy: inert zero key
+        tcount = np.zeros((s,), np.int32)
         tables = self.sched.tables
         for slot, req in self.sched.running.items():
             if self._prefilling(req):
@@ -498,14 +586,24 @@ class ServingEngine:
             tok[slot, 0] = req.generated[-1]
             pos[slot] = req.cache_len
             done[slot] = False
-        self._key, k = jax.random.split(self._key)
-        pool_k, pool_v, nxt, lp = self._step(
+            if req.stream is not None:
+                streams[slot] = req.stream
+                tcount[slot] = len(req.generated)
+        out = self._step(
             params, self.cache.pool_k, self.cache.pool_v,
             jnp.asarray(tables), jnp.asarray(tok),
-            jnp.asarray(pos), jnp.asarray(done), k)
+            jnp.asarray(pos), jnp.asarray(done))
+        if self.greedy:
+            pool_k, pool_v, nxt, lp = out
+        else:
+            pool_k, pool_v, logits = out
+            nxt, lp = self._draw(logits, jnp.asarray(streams),
+                                 jnp.asarray(tcount), jnp.asarray(done))
         self.cache.pool_k, self.cache.pool_v = pool_k, pool_v
         self.metrics.inc("serve.steps")
         self.metrics.inc("serve.decode_tokens", len(decodable))
+        if not self.greedy:
+            self.metrics.inc("serve.sampled.tokens", len(decodable))
         nxt = np.asarray(nxt)
         lp = np.asarray(lp)
         for slot in decodable:
@@ -657,9 +755,8 @@ class ServingEngine:
                 self.cache.pool_v = self._write(self.cache.pool_v, vrows, flat)
                 req.cache_len = p
                 self.sched.register_prefix(req)
-                self._key, k0 = jax.random.split(self._key)
-                t0, l0 = self._sample(logits, k0)
-                self._first_token(req, int(t0[0]), float(l0[0]), finished)
+                t0, l0 = self._first_sample(logits, req)
+                self._first_token(req, t0, l0, finished)
             elif self.prefill_chunk is None:
                 # prefix hit, unchunked: one continuation chunk covers the
                 # whole divergent tail (>= 1 token by the match cap)
@@ -725,9 +822,8 @@ class ServingEngine:
         self._step_prefill += take
         self.sched.register_prefix(req)
         if not self._prefilling(req):
-            self._key, k0 = jax.random.split(self._key)
-            t0, l0 = self._sample(logits, k0)
-            self._first_token(req, int(t0[0]), float(l0[0]), finished)
+            t0, l0 = self._first_sample(logits, req)
+            self._first_token(req, t0, l0, finished)
         return take
 
     def _first_token(self, req: Request, tok0: int, lp0: float,
@@ -736,6 +832,8 @@ class ServingEngine:
             req.first_token_at = time.perf_counter()
         req.generated.append(tok0)
         req.gen_logp.append(lp0)
+        if not self.greedy:
+            self.metrics.inc("serve.sampled.tokens")
         self._retire(req, finished)
 
     def _write_rows(self, slot: int, base: int, skip: int, take: int,
@@ -790,13 +888,19 @@ class ServingEngine:
                  on_finish=None) -> RolloutResult:
         """prompts: (B, PL) int32 padded.  Continuous-batching decode; each
         finished sample is streamed to ``on_finish(i, tokens_row, mask_row,
-        length)`` the moment it completes (cap-width rows, dock-ready)."""
+        length)`` the moment it completes (cap-width rows, dock-ready).
+
+        ``key`` is consumed as this CALL's run key only — row ``i`` samples
+        token ``t`` with ``fold_in(fold_in(key, i), t)``, exactly
+        ``RolloutEngine.generate``'s derivation, and NO engine state is
+        mutated by it: the same (params, prompts, key) replays bitwise on
+        this engine or a fresh one, and interleaved ``generate()`` calls
+        never cross-contaminate."""
         b, pl = prompts.shape
         cap = pl + self.max_new
         self._ensure_state(cap)
         if not self.sched.idle:
             raise RuntimeError("generate() needs an idle engine")
-        self._key = key
         batch = {"tokens": jnp.asarray(prompts)}
         if extras:
             batch.update(extras)
@@ -804,8 +908,15 @@ class ServingEngine:
         # RolloutEngine's prefill; rows are injected into the pool per slot
         # at admission time, so refills never recompile.
         logits, cache = self._prefill(params, batch)
-        self._key, k0 = jax.random.split(self._key)
-        tok0, lp0 = self._sample(logits, k0)
+        streams = np.asarray(
+            jax.vmap(lambda i: request_stream(key, i))(jnp.arange(b)),
+            np.uint32)
+        if self.greedy:
+            tok0, lp0 = self._sample(logits)
+        else:
+            tok0, lp0 = self._draw(logits, jnp.asarray(streams),
+                                   jnp.zeros((b,), jnp.int32),
+                                   jnp.zeros((b,), bool))
         tok0, lp0 = np.asarray(tok0), np.asarray(lp0)
 
         rows: dict[int, tuple] = {}
@@ -820,7 +931,8 @@ class ServingEngine:
         try:
             for i in range(b):
                 req = Request(rid=i, prompt=np.asarray(prompts[i], np.int32),
-                              max_new=self.max_new)
+                              max_new=self.max_new, seed=i,
+                              stream=None if self.greedy else streams[i])
                 req.stash = (cache["k"][:, i], cache["v"][:, i],
                              int(tok0[i]), float(lp0[i]))
                 self.sched.submit(req)

@@ -1,16 +1,22 @@
 """Continuous-batching request scheduler.
 
-Requests queue FIFO and are admitted into one of ``max_slots`` serving slots
-whenever a slot AND enough KV blocks for their prompt (+1 decode token) are
-free.  A finished sequence (EOS or per-request token budget) is evicted the
-moment it completes and its slot refilled from the queue — no batch barrier,
-which is the whole point versus the synchronized ``RolloutEngine``.
+Requests queue PRIORITY-then-FIFO (``AdmissionQueue``) and are admitted into
+one of ``max_slots`` serving slots whenever a slot AND enough KV blocks for
+their prompt (+1 decode token) are free.  A finished sequence (EOS or
+per-request token budget) is evicted the moment it completes and its slot
+refilled from the queue — no batch barrier, which is the whole point versus
+the synchronized ``RolloutEngine``.
 
 When a running sequence needs a new block and the pool is dry, the scheduler
-preempts the YOUNGEST running request (vLLM's recompute preemption): its
-blocks are released, and the request re-queues at the FRONT with its
-generated-so-far tokens folded into the prompt, to be re-prefilled on
-re-admission.
+preempts the LOWEST-priority running request, youngest first within that
+class (vLLM's recompute preemption; with uniform priorities this is exactly
+the classic youngest-first rule): its blocks are released, and the request
+re-queues at the FRONT of its priority class with its generated-so-far
+tokens folded into the prompt, to be re-prefilled on re-admission.
+Priorities steer only WHICH request runs when resources are contended —
+never what any request computes: per-request sampling streams
+(``core/rollout.request_stream``) make every request's tokens independent
+of admission order, so priority reshuffling is output-invariant.
 
 The SAME re-prefill path serves cross-iteration partial rollout
 (``core/partial.py``): a request may be submitted MID-SEQUENCE, seeded with
@@ -46,7 +52,6 @@ from __future__ import annotations
 
 import heapq
 import time
-from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -66,6 +71,19 @@ class Request:
     max_new: int                       # max NEW tokens this submission emits
     budget: int | None = None          # suspend (resumable) after this many
     #                                    new tokens; None => run to max_new
+    priority: int = 0                  # admission/victim class: higher runs
+    #                                    first and is preempted last; FIFO
+    #                                    within a class (AdmissionQueue)
+    seed: int | None = None            # sampling-stream identity: the engine
+    #                                    derives ``stream`` from its run key
+    #                                    + this (defaults to rid); resubmit
+    #                                    with the SAME seed to continue the
+    #                                    stream across engine runs
+    stream: np.ndarray | None = None   # (2,) uint32 per-request PRNG stream
+    #                                    root — token t is sampled with
+    #                                    fold_in(stream, t), so sampling is
+    #                                    schedule-independent (None: greedy
+    #                                    or direct scheduler-level use)
     submitted_at: float = field(default_factory=time.perf_counter)
     # -- runtime state (scheduler/engine owned) -----------------------------
     # ``generated`` may be SEEDED at submission with tokens from earlier
@@ -98,6 +116,9 @@ class Request:
     #                                    never changes), so it survives
     #                                    preemption and re-admission
     preemptions: int = 0
+    wait_skips: int = 0                # admissions that jumped past this
+    #                                    request while it waited (starvation
+    #                                    accounting — see AdmissionQueue)
     first_token_at: float = -1.0
     finished_at: float = -1.0
     # prefill stash: (k, v) rows (n, P, kv, hd) + presampled first token —
@@ -124,11 +145,125 @@ class Request:
         return len(self.prompt) + self.resume_base + self.max_new
 
 
+class AdmissionQueue:
+    """Priority-then-FIFO admission queue with a starvation bound.
+
+    A max-heap over ``(-priority, seq)``: higher ``Request.priority`` is
+    admitted first; within a class, FIFO by a monotonic sequence number.
+    ``appendleft`` (preemption/rollback re-queue) assigns a seq BELOW every
+    live entry, so a preempted request resumes at the front of its class —
+    with uniform priorities the queue degenerates to exactly the plain
+    deque the scheduler used before priorities existed.
+
+    Starvation bound: each ``popleft`` (= one admission) bumps
+    ``wait_skips`` on every entry that was submitted EARLIER than the
+    admitted one.  Once the globally-oldest entry has been jumped
+    ``starvation_limit`` times, it becomes the head regardless of priority
+    (``serve.priority.bypass`` counts these), so bulk traffic is delayed by
+    interactive traffic but never parked forever.
+
+    Heap entries are ``[-priority, seq, req]`` with seq unique, so tuple
+    comparison never reaches the Request (whose dataclass ``__eq__`` would
+    choke on ndarray fields).  The selection rule lives in ``_candidate``
+    — ``[0]`` (peek) and ``popleft`` agree by construction, which
+    ``Scheduler.admit``'s peek-check-pop sequence relies on."""
+
+    def __init__(self, starvation_limit: int = 8, metrics=None):
+        if starvation_limit < 1:
+            raise ValueError(
+                f"starvation_limit must be >= 1, got {starvation_limit}")
+        self.starvation_limit = starvation_limit
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._heap: list[list] = []    # [-priority, seq, req]
+        self._back = 0                 # next append seq (grows)
+        self._front = -1               # next appendleft seq (shrinks)
+
+    # -- deque-compatible surface (engine + tests use these) ---------------
+    def append(self, req: Request) -> None:
+        heapq.heappush(self._heap, [-req.priority, self._back, req])
+        self._back += 1
+
+    def appendleft(self, req: Request) -> None:
+        """Front-of-class re-queue (preemption, admission rollback): the
+        request outranks every same-priority entry, exactly like the old
+        deque's appendleft under uniform priorities."""
+        heapq.heappush(self._heap, [-req.priority, self._front, req])
+        self._front -= 1
+
+    def extend(self, reqs) -> None:
+        for req in reqs:
+            self.append(req)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def __iter__(self):
+        """Admission order (priority desc, FIFO within class; the
+        starvation bypass is a pop-time head adjustment, not reflected
+        here)."""
+        return (e[2] for e in sorted(self._heap, key=lambda e: e[:2]))
+
+    def _candidate(self) -> list:
+        """The heap entry the next ``popleft`` admits: the heap top, unless
+        the globally-oldest waiting request has been jumped
+        ``starvation_limit``+ times — then the oldest."""
+        top = self._heap[0]
+        oldest = min(self._heap, key=lambda e: e[1])
+        if oldest is not top and oldest[2].wait_skips >= self.starvation_limit:
+            return oldest
+        return top
+
+    def __getitem__(self, i: int):
+        if i != 0:
+            raise IndexError("AdmissionQueue only exposes the head ([0])")
+        if not self._heap:
+            raise IndexError("peek from an empty AdmissionQueue")
+        return self._candidate()[2]
+
+    def popleft(self) -> Request:
+        if not self._heap:
+            raise IndexError("popleft from an empty AdmissionQueue")
+        entry = self._candidate()
+        if entry is self._heap[0]:
+            heapq.heappop(self._heap)
+        else:                          # starvation bypass: out-of-heap-order
+            self.metrics.inc("serve.priority.bypass")
+            self._heap = [e for e in self._heap if e is not entry]
+            heapq.heapify(self._heap)
+        for e in self._heap:
+            if e[1] < entry[1]:        # submitted earlier, jumped again
+                e[2].wait_skips += 1
+        return entry[2]
+
+    # -- debugging ----------------------------------------------------------
+    def check_invariants(self) -> None:
+        seqs = [e[1] for e in self._heap]
+        assert len(seqs) == len(set(seqs)), "duplicate queue seq"
+        assert all(self._front < s < self._back for s in seqs), \
+            "queue seq outside the live [front, back] window"
+        for e in self._heap:
+            assert e[0] == -e[2].priority, \
+                f"heap rank {e[0]} stale vs request priority {e[2].priority}"
+            assert e[2].slot == -1, \
+                f"waiting request {e[2].rid} still claims slot {e[2].slot}"
+            assert e[2].wait_skips >= 0
+        if self._heap:
+            cand = self._candidate()[2]
+            best = max(e[2].priority for e in self._heap)
+            assert (cand.priority == best
+                    or cand.wait_skips >= self.starvation_limit), \
+                "queue head neither top-priority nor a starvation bypass"
+
+
 class Scheduler:
     """Slot + block bookkeeping for the serving engine."""
 
     def __init__(self, cache: PagedKVCache, max_slots: int,
-                 prefix_cache: bool = True, tracer=None, metrics=None):
+                 prefix_cache: bool = True, tracer=None, metrics=None,
+                 starvation_limit: int = 8):
         self.cache = cache
         self.max_slots = max_slots
         # lifecycle instants (serve.admit / serve.preempt / serve.suspend /
@@ -140,7 +275,8 @@ class Scheduler:
         self.block_size = cache.block_size
         self.max_blocks = cache.max_blocks_per_seq
         self.prefix_cache = prefix_cache
-        self.waiting: deque[Request] = deque()
+        self.waiting = AdmissionQueue(starvation_limit=starvation_limit,
+                                      metrics=self.metrics)
         self.running: dict[int, Request] = {}
         self.tables = np.full((max_slots, self.max_blocks), cache.null_block,
                               np.int32)
@@ -229,8 +365,10 @@ class Scheduler:
 
     def admit(self, limit: int | None = None) -> list[Request]:
         """Move queued requests into free slots while both a slot and enough
-        blocks for their prefill (+1 decode write) exist.  FIFO — the head
-        blocks the queue (no head-of-line skipping, keeps latency fair).
+        blocks for their prefill (+1 decode write) exist.  Priority-then-
+        FIFO (``AdmissionQueue``) — the head blocks the queue (no
+        head-of-line skipping past an infeasible head, keeps the admission
+        order deterministic and latency fair within a class).
 
         Each admission first prefix-matches the request's prompt head
         (prompt + seed) against the cache index: matched blocks are SHARED
@@ -309,7 +447,8 @@ class Scheduler:
                 self.tracer.instant("serve.admit", cat="serve", args={
                     "rid": req.rid, "slot": slot,
                     "prefill_len": req.prefill_len,
-                    "shared_rows": req.shared_rows})
+                    "shared_rows": req.shared_rows,
+                    "priority": req.priority})
         return admitted
 
     def rematch(self, req: Request) -> int:
@@ -381,10 +520,22 @@ class Scheduler:
             req.registered = -1
 
     # -- growth / preemption ------------------------------------------------
+    def _victim_slot(self) -> int:
+        """Preemption victim: LOWEST priority running request; youngest
+        (latest-admitted) within that class.  A strictly-higher-priority
+        request is never evicted while a lower-priority one runs; with
+        uniform priorities this reduces exactly to the classic
+        youngest-first rule (``_admit_order[-1]``), so the priority-free
+        bit-identity fixtures see unchanged scheduling."""
+        pos = {s: i for i, s in enumerate(self._admit_order)}
+        return min(self._admit_order,
+                   key=lambda s: (self.running[s].priority, -pos[s]))
+
     def ensure_capacity(self) -> list[Request]:
         """Guarantee every running slot owns a block for its next KV write.
-        Preempts (recompute-style) youngest-first when the pool runs dry.
-        Returns the preempted requests (already re-queued)."""
+        Preempts (recompute-style) lowest-priority-youngest-first
+        (``_victim_slot``) when the pool runs dry.  Returns the preempted
+        requests (already re-queued)."""
         preempted: list[Request] = []
         for slot in list(self._admit_order):
             req = self.running.get(slot)
@@ -397,7 +548,7 @@ class Scheduler:
                     self.tables[slot, len(self._blocks[slot])] = blk
                     self._blocks[slot].append(blk)
                     continue
-                victim_slot = self._admit_order[-1]
+                victim_slot = self._victim_slot()
                 victim = self._preempt(victim_slot)
                 preempted.append(victim)
                 if victim_slot == slot:
@@ -488,6 +639,12 @@ class Scheduler:
         assert not (set(owned) & cache._free_set), "owned block in free set"
         assert len(owned) + cache.num_free == cache.num_blocks, "block leak"
         assert sorted(self.running) == sorted(self._admit_order)
+        # admission queue: heap/seq consistency, head-selection rule, and
+        # strict waiting/running exclusivity
+        self.waiting.check_invariants()
+        waiting_ids = {id(r) for r in self.waiting}
+        assert not waiting_ids & {id(r) for r in self.running.values()}, \
+            "request simultaneously waiting and running"
         for slot, req in self.running.items():
             assert len(self._blocks[slot]) >= blocks_for(
                 max(req.cache_len, 1), self.block_size)

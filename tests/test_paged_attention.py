@@ -196,8 +196,7 @@ def _lowered_step(cfg, params, *, block_size, max_seq):
     done = jnp.ones((s,), bool)
     compiled = eng._step.lower(
         params, eng.cache.pool_k, eng.cache.pool_v,
-        jnp.asarray(eng.sched.tables), tok, pos, done,
-        jax.random.PRNGKey(0)).compile()
+        jnp.asarray(eng.sched.tables), tok, pos, done).compile()
     return eng, compiled
 
 

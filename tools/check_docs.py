@@ -32,7 +32,8 @@ CI_EXECUTED = [
     "benchmarks.bench_dispatch",
     "benchmarks.bench_partial_stream",
     "benchmarks.bench_serving",
-    "benchmarks.run",                  # bench-artifacts step (BENCH_*.json)
+    "benchmarks.run",                  # bench-artifacts steps (BENCH_*.json:
+    #                                    serving, sampling, swap)
 ]
 
 # scripts CI must both execute and document (same agreement contract)
